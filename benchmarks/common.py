@@ -1,0 +1,118 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressionConfig, FLConfig
+from repro.data import (FederatedDataset, cifar10_like, medmnist_like,
+                        partition_by_class, partition_by_group,
+                        shakespeare_like)
+from repro.models import build_model
+from repro.models.cnn import CNN, CNNConfig
+from repro.configs import get_config
+from repro.orchestrator import (FaultConfig, Orchestrator, StragglerPolicy,
+                                make_hybrid_fleet)
+
+ART = Path(os.environ.get("REPRO_BENCH_DIR", "artifacts/bench"))
+# paper protocol: 100 rounds; CPU-budgeted default below, override with env
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "24"))
+
+CNN_SMALL = CNNConfig("bench-cifar-cnn", (32, 32, 3), 10, channels=(16, 32),
+                      dense=128)
+MED_SMALL = CNNConfig("bench-med-cnn", (28, 28, 1), 9, channels=(16, 32),
+                      dense=128)
+
+
+def save(name: str, payload: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def dataset_bundle(which: str, n_clients: int = 20, seed: int = 0):
+    """(fed_dataset, model_obj, params, loss_fn, eval_fn)."""
+    if which == "cifar10":
+        ds = cifar10_like(n=6000, seed=seed, noise=1.25)
+        parts = partition_by_class(ds.y, n_clients, 2, seed=seed)
+        model = CNN(CNN_SMALL)
+    elif which == "medmnist":
+        ds = medmnist_like(n=5000, seed=seed + 1)
+        parts = partition_by_class(ds.y, n_clients, 3, seed=seed)
+        model = CNN(MED_SMALL)
+    elif which == "shakespeare":
+        ds = shakespeare_like(n_seqs=3000, seq_len=48, n_speakers=n_clients * 2,
+                              seed=seed + 2)
+        parts = partition_by_group(ds.y, n_clients, seed=seed)
+        cfg = get_config("paper-charlm")
+        model = build_model(cfg)
+    else:
+        raise ValueError(which)
+    fed = FederatedDataset(ds, parts, seed=seed)
+    params = model.init(jax.random.PRNGKey(seed))
+    if which == "shakespeare":
+        eval_batch = jax.tree.map(jnp.asarray, fed.eval_batch(384))
+
+        @jax.jit
+        def eval_fn(p):
+            # next-char accuracy (the LEAF Shakespeare metric)
+            toks = eval_batch["tokens"]
+            x = model.embed(p, toks)
+            import repro.models.sharding  # noqa
+            pos = jnp.arange(toks.shape[1])
+            h, _, _ = model._backbone(p, x, mode="train", positions=pos)
+            from repro.models.common import rms_norm
+            h = rms_norm(h, p["final_norm"], model.cfg.norm_eps)
+            lg = model.logits(p, h)[..., :model.cfg.vocab]
+            return (lg.argmax(-1) == eval_batch["targets"]).mean()
+    else:
+        eval_batch = jax.tree.map(jnp.asarray, fed.eval_batch(768))
+        acc = jax.jit(model.accuracy)
+        eval_fn = lambda p: acc(p, eval_batch)
+    return fed, model, params, model.loss_fn, eval_fn
+
+
+def run_fl(which: str, algo: str = "fedavg", rounds: int = None,
+           n_clients_pool: int = 20, clients_per_round: int = 8,
+           compression: CompressionConfig = None,
+           straggler: StragglerPolicy = None, faults: FaultConfig = None,
+           selection: str = "adaptive", seed: int = 0,
+           flops_per_client_round: float = 2e12, batch_size: int = 16,
+           local_steps: int = 5, lr: float = None):
+    fed, model, params, loss_fn, eval_fn = dataset_bundle(
+        which, n_clients_pool, seed)
+    fl = FLConfig(
+        num_clients=clients_per_round, local_steps=local_steps,
+        client_lr=lr or (0.3 if which == "shakespeare" else 0.08),
+        fedprox_mu=0.05 if algo == "fedprox" else 0.0,
+        compression=compression or CompressionConfig())
+    fleet = make_hybrid_fleet(n_clients_pool // 2,
+                              n_clients_pool - n_clients_pool // 2,
+                              seed=seed,
+                              data_sizes=[fed.client_size(c)
+                                          for c in range(fed.num_clients)])
+    orch = Orchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=loss_fn, fl=fl,
+        selection_name=selection,
+        straggler=straggler or StragglerPolicy(),
+        faults=faults or FaultConfig(),
+        batch_size=batch_size, flops_per_client_round=flops_per_client_round,
+        eval_fn=eval_fn, eval_every=max((rounds or ROUNDS) // 4, 1), seed=seed)
+    t0 = time.time()
+    params, _ = orch.run(params, rounds or ROUNDS)
+    return {
+        "final_acc": float(orch.logs[-1].eval_metric),
+        "acc_trace": [l.eval_metric for l in orch.logs
+                      if np.isfinite(l.eval_metric)],
+        "loss_trace": [l.client_loss for l in orch.logs],
+        "virtual_time_s": orch.virtual_clock,
+        "mean_round_s": float(np.mean([l.duration_s for l in orch.logs])),
+        "bytes_per_client_round": orch.comm.mean_bytes_per_client_round(),
+        "wall_s": time.time() - t0,
+        "orch": orch,
+    }

@@ -1,0 +1,255 @@
+"""Analytic FLOP/byte cost model per (arch x shape) — the compute and memory
+roofline terms.
+
+Why analytic: XLA's HloCostAnalysis on the AOT-compiled module counts while
+bodies ONCE (verified empirically — flops are invariant to lax.scan trip
+count), so with scan-over-layers/clients/steps the reported FLOPs understate
+the true work by the loop trip counts.  We therefore:
+
+  * derive compute/memory terms from exact per-layer formulas below
+    (validated against cost_analysis on an --unroll build, see
+    EXPERIMENTS.md §Roofline validation),
+  * take the COLLECTIVE term from the partitioned HLO text with while
+    trip-count multipliers (launch/dryrun.py::collective_bytes).
+
+Conventions: matmul [m,k]x[k,n] = 2mkn FLOPs; bwd = 2x fwd; remat (per-group
+jax.checkpoint) adds ~1 extra fwd -> train factor 4.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.models.transformer import block_pattern
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+DCN_BW = 6.25e9              # bytes/s cross-pod (50 Gb/s class WAN/DCN)
+
+
+def mamba_dims(cfg: ModelConfig):
+    di = cfg.mamba.expand * cfg.d_model
+    R = cfg.mamba.dt_rank or math.ceil(cfg.d_model / 16)
+    return di, R, cfg.mamba.d_state
+
+
+def layer_param_bytes(cfg: ModelConfig, slot) -> float:
+    """Parameter bytes of one layer slot."""
+    D, F = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    n = 0
+    if slot.mixer in ("attn", "cross"):
+        n += D * (H + 2 * KV) * hd + H * hd * D
+    elif slot.mixer == "mamba":
+        di, R, N = mamba_dims(cfg)
+        n += D * 2 * di + cfg.mamba.d_conv * di + di * (R + 2 * N) \
+            + R * di + di * N + 2 * di + di * D
+    elif slot.mixer == "mlstm":
+        du = int(cfg.xlstm.proj_factor * D)
+        n += D * 2 * du + 3 * du * du + 2 * du * cfg.n_heads + du * D
+    elif slot.mixer == "slstm":
+        hd_s = D // cfg.n_heads
+        n += 4 * (D * D + cfg.n_heads * hd_s * hd_s + D) + D * D
+    if slot.ffn == "mlp":
+        mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+        n += mats * D * F
+    elif slot.ffn == "moe":
+        mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+        n += D * cfg.moe.num_experts \
+            + cfg.moe.num_experts * mats * D * cfg.moe.d_expert
+    return n * bpe
+
+
+def model_param_bytes(cfg: ModelConfig) -> float:
+    pattern = block_pattern(cfg)
+    G = cfg.n_layers // len(pattern)
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    total = G * sum(layer_param_bytes(cfg, s) for s in pattern)
+    ncb = max(cfg.n_codebooks, 1)
+    total += ncb * cfg.vocab * cfg.d_model * bpe          # embed
+    total += cfg.d_model * ncb * cfg.vocab_padded * bpe   # unembed
+    return total
+
+
+def active_param_bytes(cfg: ModelConfig) -> float:
+    """MoE: only top_k of num_experts active per token."""
+    total = model_param_bytes(cfg)
+    if cfg.moe is None:
+        return total
+    pattern = block_pattern(cfg)
+    G = cfg.n_layers // len(pattern)
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+    expert_bytes = (G * sum(1 for s in pattern if s.ffn == "moe")
+                    * cfg.moe.num_experts * mats * cfg.d_model
+                    * cfg.moe.d_expert * bpe)
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return total - expert_bytes * (1 - frac)
+
+
+def layer_fwd_flops_per_token(cfg: ModelConfig, slot, ctx: float,
+                              n_patches: int = 0) -> float:
+    D, F = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    f = 0.0
+    if slot.mixer == "attn":
+        f += 2 * D * (H + 2 * KV) * hd          # qkv
+        f += 2 * ctx * H * hd * 2               # scores + AV
+        f += 2 * H * hd * D                     # out proj
+    elif slot.mixer == "cross":
+        f += 2 * D * H * hd * 2                 # q + out
+        f += 2 * n_patches * H * hd * 2         # cross scores + AV
+        # kv over patches amortised per token: patches*2*KV*hd*D / seq — small,
+        # folded into the scores term for simplicity.
+    elif slot.mixer == "mamba":
+        di, R, N = mamba_dims(cfg)
+        f += 4 * D * di + 2 * cfg.mamba.d_conv * di + 2 * di * (R + 2 * N) \
+            + 2 * R * di + 12 * di * N + 2 * di * D + 8 * di
+    elif slot.mixer == "mlstm":
+        du = int(cfg.xlstm.proj_factor * D)
+        hdu = du // cfg.n_heads
+        L = cfg.xlstm.chunk
+        f += 4 * D * du + 3 * 2 * du * du + 4 * du * cfg.n_heads
+        f += 2 * L * du * 2                     # intra-chunk attn
+        f += 2 * du * hdu * 3                   # state query/update
+        f += 2 * du * D
+    elif slot.mixer == "slstm":
+        hd_s = D // cfg.n_heads
+        f += 4 * 2 * D * D + 8 * D * hd_s + 30 * D + 2 * D * D
+    if slot.ffn == "mlp":
+        mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+        f += mats * 2 * D * F
+    elif slot.ffn == "moe":
+        mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+        f += 2 * D * cfg.moe.num_experts
+        f += cfg.moe.top_k * mats * 2 * D * cfg.moe.d_expert
+    return f
+
+
+def fwd_flops(cfg: ModelConfig, n_tokens: float, ctx: float) -> float:
+    pattern = block_pattern(cfg)
+    G = cfg.n_layers // len(pattern)
+    per_tok = G * sum(layer_fwd_flops_per_token(cfg, s, ctx, cfg.n_patches)
+                      for s in pattern)
+    ncb = max(cfg.n_codebooks, 1)
+    per_tok += 2 * cfg.d_model * ncb * cfg.vocab_padded   # unembed
+    return per_tok * n_tokens
+
+
+@dataclass
+class Costs:
+    flops: float             # total FLOPs of the lowered step (global)
+    hbm_bytes: float         # total HBM traffic (global)
+    model_flops: float       # 6*N_active*tokens reference
+    tokens: float
+    param_bytes: float
+    active_param_bytes: float
+
+
+def step_costs(arch: str, shape_name: str, clients: int = 0,
+               local_steps: int = 1) -> Costs:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    S, B = shape.seq_len, shape.global_batch
+    pb = model_param_bytes(cfg)
+    apb = active_param_bytes(cfg)
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    n_active = apb / bpe
+
+    if shape.kind == "train":
+        from repro.launch.dryrun import PARALLEL_ARCHS
+        C = clients or (16 if arch in PARALLEL_ARCHS else 4)
+        H = local_steps
+        tokens_per_step = B // C * S * 1.0    # per client per local step
+        ctx = min(cfg.sliding_window or S, S) if cfg.sliding_window else (S + 1) / 2
+        f1 = fwd_flops(cfg, tokens_per_step, ctx)
+        flops = C * H * 4.0 * f1              # fwd + remat-fwd + 2x bwd
+        flops += C * 40.0 * (pb / bpe)        # delta compress (quantize f32)
+        flops += 4.0 * (pb / bpe)             # server apply
+        tokens = C * H * tokens_per_step
+        # HBM: per client-step: params fwd + remat + bwd reads + grad writes
+        act_traffic = 8 * tokens_per_step * cfg.d_model * bpe * cfg.n_layers
+        hbm = C * H * (4 * pb + act_traffic) + 3 * C * pb   # delta accum r/w
+        return Costs(flops, hbm, 6 * n_active * tokens, tokens, pb, apb)
+
+    # inference reference is forward-only: MODEL_FLOPS = 2*N_active*tokens
+    if shape.kind == "prefill":
+        ctx = min(cfg.sliding_window or S, S) if cfg.sliding_window else (S + 1) / 2
+        tokens = B * S * 1.0
+        flops = fwd_flops(cfg, tokens, ctx)
+        act = 4 * tokens * cfg.d_model * bpe * cfg.n_layers
+        cache = cache_bytes(cfg, B, S)
+        return Costs(flops, pb + act + cache, 2 * n_active * tokens, tokens,
+                     pb, apb)
+
+    # decode: one token per sequence
+    ctx = min(cfg.sliding_window, S) if cfg.sliding_window else S
+    tokens = B * 1.0
+    flops = fwd_flops(cfg, tokens, ctx)
+    # decode HBM: active params + full KV/state cache read + slot write
+    hbm = decode_active_bytes(cfg, B) + cache_bytes(cfg, B, S)
+    return Costs(flops, hbm, 2 * n_active * tokens, tokens, pb, apb)
+
+
+def cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    pattern = block_pattern(cfg)
+    G = cfg.n_layers // len(pattern)
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    S_c = min(cfg.sliding_window, S) if cfg.sliding_window else S
+    total = 0.0
+    for s in pattern:
+        if s.mixer == "attn":
+            total += G * B * S_c * 2 * cfg.kv_heads * cfg.hd * bpe
+        elif s.mixer == "cross":
+            total += G * B * cfg.n_patches * 2 * cfg.kv_heads * cfg.hd * bpe
+        elif s.mixer == "mamba":
+            di, R, N = mamba_dims(cfg)
+            total += G * B * di * (N * 4 + (cfg.mamba.d_conv - 1) * bpe)
+        elif s.mixer == "mlstm":
+            du = int(cfg.xlstm.proj_factor * cfg.d_model)
+            hdu = du // cfg.n_heads
+            total += G * B * cfg.n_heads * (hdu * hdu + hdu + 1) * 4
+        elif s.mixer == "slstm":
+            total += G * B * cfg.d_model * 4 * 4
+    return total
+
+
+def decode_active_bytes(cfg: ModelConfig, B: int) -> float:
+    """Weight bytes read for one decode step: non-expert params + the expert
+    weights actually routed to (bounded by B*top_k distinct experts)."""
+    apb_full = model_param_bytes(cfg)
+    if cfg.moe is None:
+        return apb_full
+    expert_frac = min(1.0, B * cfg.moe.top_k / cfg.moe.num_experts)
+    act = active_param_bytes(cfg)
+    # interpolate between active-only and full depending on batch coverage
+    return act + (apb_full - act) * expert_frac
+
+
+def roofline_terms(arch: str, shape_name: str, n_chips: int,
+                   collective_bytes_per_device: float,
+                   clients: int = 0, local_steps: int = 1) -> dict:
+    c = step_costs(arch, shape_name, clients, local_steps)
+    compute_s = c.flops / (n_chips * PEAK_FLOPS)
+    memory_s = c.hbm_bytes / (n_chips * HBM_BW)
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "model_flops": c.model_flops,
+        "useful_ratio": c.model_flops / c.flops if c.flops else 0.0,
+        "tokens": c.tokens,
+        "param_bytes": c.param_bytes,
+        "active_param_bytes": c.active_param_bytes,
+        "bytes_per_device": c.param_bytes / n_chips,
+    }

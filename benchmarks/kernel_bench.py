@@ -1,0 +1,64 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU — wall times
+are NOT TPU times; the derived column reports bytes touched per call so the
+HBM-bound roofline expectation on TPU is visible)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from benchmarks.common import save
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6      # us
+
+
+def main(rounds=None):
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    rows = []
+    for name, fn, nbytes in [
+        ("quantize_int8", jax.jit(lambda a: ops.quantize_dequant(a, bits=8)),
+         n * 8),
+        ("quantize_ref", jax.jit(lambda a: ref.quantize_dequant_ref(a, 8)),
+         n * 8),
+        ("topk_sparsify", jax.jit(lambda a: ops.topk_sparsify(a, k=26)),
+         n * 8),
+        ("topk_ref", jax.jit(lambda a: ref.topk_sparsify_ref(a, 26)), n * 8),
+        ("fedprox_update",
+         jax.jit(lambda a: ops.fedprox_update(a, a, a, lr=0.1, mu=0.01)),
+         n * 16),
+    ]:
+        us = timeit(lambda: fn(x))
+        rows.append({"name": name, "us_per_call": us,
+                     "derived_GBps_touched": nbytes / us / 1e3})
+        print(f"kernel,{name},{us:.0f}us,{nbytes/us/1e3:.2f}GB/s-touched")
+    B, L, D, N = 4, 128, 1024, 16
+    a = jnp.asarray(rng.uniform(0.5, 1, (B, L, D, N)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(B, L, D, N)).astype(np.float32))
+    h0 = jnp.zeros((B, D, N), jnp.float32)
+    for name, fn in [("selective_scan_kernel", ops.selective_scan_chunk),
+                     ("selective_scan_ref", ref.selective_scan_chunk_ref)]:
+        jfn = jax.jit(fn)
+        us = timeit(lambda: jfn(a, b, h0))
+        nbytes = a.nbytes * 3
+        rows.append({"name": name, "us_per_call": us,
+                     "derived_GBps_touched": nbytes / us / 1e3})
+        print(f"kernel,{name},{us:.0f}us,{nbytes/us/1e3:.2f}GB/s-touched")
+    save("kernel_bench", {"rows": rows,
+                          "note": "interpret-mode CPU walltimes, not TPU"})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Roofline analysis (deliverable g): reads launch/dryrun.py artifacts and
+emits the per-(arch x shape x mesh) three-term roofline table.
+
+  compute term    = FLOPs / (chips x 197 TFLOP/s)        [analytic, costmodel]
+  memory term     = HBM bytes / (chips x 819 GB/s)       [analytic, costmodel]
+  collective term = collective bytes / (50 GB/s/link)    [measured from the
+                    partitioned HLO with while-trip-count multipliers;
+                    bytes are per-device participation volumes]
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--artifacts artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks import costmodel as cm
+
+
+def load_artifacts(art_dir: Path) -> list[dict]:
+    out = []
+    for p in sorted(art_dir.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("groups_override"):
+            continue                       # decomposition runs, not baselines
+        out.append(d)
+    return out
+
+
+def analyse(d: dict) -> dict:
+    n_chips = d.get("n_devices", 256)
+    if "skipped" in d or "error" in d:
+        return {**d, "status": "skipped" if "skipped" in d else "ERROR"}
+    cb = d.get("collective_bytes", {})
+    coll = sum(v for k, v in cb.items() if not k.endswith("/cross_pod"))
+    cross = sum(v for k, v in cb.items() if k.endswith("/cross_pod"))
+    terms = cm.roofline_terms(
+        d["arch"], d["shape"], n_chips, coll,
+        clients=d.get("clients", 0), local_steps=d.get("local_steps", 1))
+    terms["crosspod_s"] = cross / cm.DCN_BW
+    if terms["crosspod_s"] > terms[terms["dominant"] + "_s"]:
+        terms["dominant"] = "crosspod"
+    mem = d.get("memory_analysis", {})
+    return {
+        **d, "status": "ok", **terms,
+        "collective_bytes_total": coll,
+        "temp_bytes_per_device": mem.get("temp_size_in_bytes", 0) / n_chips
+        if isinstance(mem.get("temp_size_in_bytes"), (int, float)) else None,
+    }
+
+
+def one_liner(r: dict) -> str:
+    if r["status"] != "ok":
+        reason = r.get("skipped", r.get("error", ""))[:60]
+        return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+                f"-- {r['status']}: {reason}")
+    return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+            f"compute {r['compute_s']:9.4f}s  mem {r['memory_s']:9.4f}s  "
+            f"coll {r['collective_s']:9.4f}s  -> {r['dominant']:10s} "
+            f"useful {r['useful_ratio']:5.2f}")
+
+
+def what_would_help(r: dict) -> str:
+    dom = r.get("dominant")
+    if dom == "compute":
+        return ("compute-bound: raise MFU — larger per-chip tiles, fewer "
+                "remat recomputes, or fewer clients x local steps per round")
+    if dom == "memory":
+        return ("HBM-bound: cut activation traffic (longer fused chains, "
+                "flash-style attention) and weight re-reads (cache gathered "
+                "experts across the top-k loop)")
+    return ("collective-bound: shrink per-layer weight gathers (keep experts "
+            "resident per model shard), compress/quantize the delta "
+            "all-reduce, overlap collectives with compute")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    arts = load_artifacts(Path(args.artifacts))
+    results = [analyse(d) for d in arts]
+    print(f"{'arch':24s} {'shape':12s} {'mesh':6s} roofline terms (s/step)")
+    print("-" * 118)
+    for r in results:
+        print(one_liner(r))
+    Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.json_out).write_text(json.dumps(results, indent=1, default=str))
+    ok = [r for r in results if r["status"] == "ok"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\n{len(ok)} analysed; dominant terms: {doms}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table 4: per-round communication volume with/without compression
+(paper: ~43-45 MB -> ~14-16 MB, ~65% reduction, over 10 rounds).
+
+We run 10 real rounds with byte-exact payload accounting under 8-bit
+quantization + top-30% sparsification.  The reproduced claim is the ~65%
+volume reduction at negligible accuracy cost; absolute MB scales with the
+model (the paper's is a larger CNN than our CPU-budget one — Table 4 reports
+per-client upload MB per round for both)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompressionConfig
+from benchmarks.common import run_fl, save
+
+
+def main(rounds: int = None):
+    rounds = rounds or 10
+    comp = CompressionConfig(quantize_bits=8, topk_frac=0.30)
+    res_plain = run_fl("cifar10", rounds=rounds, seed=7)
+    res_comp = run_fl("cifar10", rounds=rounds, seed=7, compression=comp)
+
+    orch_p, orch_c = res_plain["orch"], res_comp["orch"]
+    rows = []
+    bpr_p, np_p = orch_p.comm.bytes_per_round("up"), orch_p.comm.participants_per_round()
+    bpr_c, np_c = orch_c.comm.bytes_per_round("up"), orch_c.comm.participants_per_round()
+    for r in range(rounds):
+        plain = bpr_p.get(r, 0) / max(np_p.get(r, 1), 1) / 1e6
+        compd = bpr_c.get(r, 0) / max(np_c.get(r, 1), 1) / 1e6
+        rows.append({"round": r + 1,
+                     "no_compression_MB": round(plain, 3),
+                     "with_compression_MB": round(compd, 3)})
+        print(f"table4,round={r+1},plain={rows[-1]['no_compression_MB']},"
+              f"comp={rows[-1]['with_compression_MB']}")
+    red = 1 - np.mean([r["with_compression_MB"] for r in rows]) / \
+        max(np.mean([r["no_compression_MB"] for r in rows]), 1e-9)
+    print(f"table4,reduction={red:.1%},acc_plain={res_plain['final_acc']:.3f},"
+          f"acc_comp={res_comp['final_acc']:.3f}")
+    save("table4_communication", {
+        "rows": rows, "reduction": red,
+        "acc_plain": res_plain["final_acc"], "acc_comp": res_comp["final_acc"],
+        "paper_reduction": 0.65})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Federated fine-tuning of an assigned LLM architecture (paper §6:
+"Integration with foundation models").
+
+    PYTHONPATH=src python examples/federated_llm_finetune.py --arch gemma-2b
+
+Runs the FL round step directly (no orchestrator) on a REDUCED variant of an
+assigned arch, with sequential client execution — the same code path the
+multi-pod dry-run lowers for the full configs, executed for real on CPU.
+Shows: FedProx local training of a transformer, per-round compressed-delta
+aggregation, and serve-after-train (prefill+decode with the trained params).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import CompressionConfig, FLConfig, build_fl_round_step
+from repro.core.compression import payload_bytes
+from repro.models import build_model
+from repro.optim import get_client_optimizer, get_server_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    m = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = m.init(rng)
+
+    C, H, b, S = args.clients, args.local_steps, 4, 32
+    fl = FLConfig(num_clients=C, local_steps=H, client_lr=0.1, fedprox_mu=0.01,
+                  client_exec="sequential",
+                  compression=CompressionConfig(quantize_bits=8,
+                                                topk_frac=0.25))
+    step = jax.jit(build_fl_round_step(
+        m.loss_fn, get_client_optimizer("sgd"),
+        get_server_optimizer("fedavg"), fl))
+    print(f"arch={cfg.name}; uncompressed update "
+          f"{payload_bytes(params, None)/1e6:.1f} MB -> compressed "
+          f"{payload_bytes(params, fl.compression)/1e6:.1f} MB/client/round")
+
+    # non-IID client corpora: each client's tokens drawn from its own range
+    def client_batches(r):
+        ks = jax.random.split(jax.random.PRNGKey(r), C)
+        toks = []
+        for c in range(C):
+            lo = (c * cfg.vocab) // (2 * C)
+            hi = lo + cfg.vocab // 2
+            toks.append(jax.random.randint(ks[c], (H, b, S + 1), lo, hi,
+                                           jnp.int32))
+        t = jnp.stack(toks)
+        leaves = {"tokens": t[..., :-1], "targets": t[..., 1:]}
+        if cfg.cross_attn_every:
+            leaves["patches"] = jax.random.normal(
+                ks[0], (C, H, b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.n_codebooks:
+            t4 = jax.random.randint(ks[0], (C, H, b, S + 1, cfg.n_codebooks),
+                                    0, cfg.vocab, jnp.int32)
+            leaves = {"tokens": t4[..., :-1, :], "targets": t4[..., 1:, :]}
+        return leaves
+
+    weights = jnp.ones((C,))
+    state = ()
+    for r in range(args.rounds):
+        mask = jnp.asarray(np.random.default_rng(r).random(C) > 0.2,
+                           jnp.float32)  # 20% dropouts
+        params, state, metrics = step(params, state, client_batches(r),
+                                      weights, mask, jax.random.PRNGKey(r))
+        print(f"round {r}: loss {float(metrics['client_loss']):.4f} "
+              f"delta {float(metrics['delta_norm']):.3f} "
+              f"participation {float(metrics['participation']):.2f}")
+
+    # serve with the fine-tuned weights
+    prompt = jax.random.randint(rng, (2, 8, cfg.n_codebooks) if cfg.n_codebooks
+                                else (2, 8), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": prompt}
+    patches = None
+    if cfg.cross_attn_every:
+        patches = jax.random.normal(rng, (2, cfg.n_patches, cfg.d_model),
+                                    jnp.float32)
+        batch["patches"] = patches
+    logits, st = m.prefill(params, batch, s_max=16)
+    tok = logits.argmax(-1).astype(jnp.int32)
+    logits, st = m.decode_step(params, st, tok, jnp.int32(8), patches)
+    print("served logits:", logits.shape, "finite:",
+          bool(jnp.isfinite(logits).all()))
+
+
+if __name__ == "__main__":
+    main()

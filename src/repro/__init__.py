@@ -1,0 +1,6 @@
+"""repro: Federated Learning for heterogeneous HPC + cloud (Ghimire et al.
+2025), reproduced as a production multi-pod JAX/TPU framework.
+
+See DESIGN.md for architecture, EXPERIMENTS.md for results.
+"""
+__version__ = "1.0.0"

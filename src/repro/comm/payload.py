@@ -1,0 +1,58 @@
+"""Pytree payload serialization (wire format + checkpoint substrate).
+
+Flat binary layout: a JSON header (paths, shapes, dtypes) + concatenated
+raw little-endian array bytes.  Used by the checkpoint subsystem and for
+exact wire-size accounting of uncompressed transfers."""
+from __future__ import annotations
+
+import io
+import json
+
+import jax
+import numpy as np
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", k)) for k in path)
+            for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def serialize_tree(tree) -> bytes:
+    keys, leaves, _ = _paths(tree)
+    arrays = [np.asarray(l) for l in leaves]
+    header = {
+        "keys": keys,
+        "shapes": [list(a.shape) for a in arrays],
+        "dtypes": [a.dtype.str for a in arrays],
+    }
+    hb = json.dumps(header).encode()
+    buf = io.BytesIO()
+    buf.write(len(hb).to_bytes(8, "little"))
+    buf.write(hb)
+    for a in arrays:
+        buf.write(np.ascontiguousarray(a).tobytes())
+    return buf.getvalue()
+
+
+def deserialize_tree(data: bytes, like=None):
+    n = int.from_bytes(data[:8], "little")
+    header = json.loads(data[8:8 + n].decode())
+    off = 8 + n
+    arrays = []
+    for shape, dtype in zip(header["shapes"], header["dtypes"]):
+        dt = np.dtype(dtype)
+        count = int(np.prod(shape)) if shape else 1
+        nb = count * dt.itemsize
+        arrays.append(np.frombuffer(data[off:off + nb], dt).reshape(shape))
+        off += nb
+    if like is not None:
+        flat, treedef = jax.tree_util.tree_flatten(like)
+        assert len(flat) == len(arrays), "structure mismatch"
+        return jax.tree_util.tree_unflatten(treedef, arrays)
+    return dict(zip(header["keys"], arrays))
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree))

@@ -1,0 +1,89 @@
+"""Communication layer (paper §3.2): protocol abstraction + byte/time
+accounting.
+
+The paper's deployment uses gRPC (cloud) and MPI (HPC).  On the TPU target
+the update transfer is an XLA collective, so this layer's runtime job is
+*accounting and policy*: which link class a transfer crosses, what it costs,
+and what the compression config saves — feeding Table 4 and the ablations.
+The link classes mirror the paper's testbed plus the TPU fabric:
+
+  grpc_cloud : cloud VM uplink    (~1 Gb/s, 10s of ms)
+  mpi_hpc    : Infiniband         (~100 Gb/s, ~us)
+  ici        : intra-pod TPU      (~50 GB/s/link)
+  dcn        : cross-pod / WAN    (~6.25 GB/s, ms) — where hierarchical
+               compressed aggregation applies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class LinkClass:
+    name: str
+    bandwidth_GBps: float
+    latency_s: float
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / (self.bandwidth_GBps * 1e9)
+
+
+GRPC_CLOUD = LinkClass("grpc_cloud", 0.125, 0.020)
+MPI_HPC = LinkClass("mpi_hpc", 12.5, 5e-6)
+ICI = LinkClass("ici", 50.0, 1e-6)
+DCN = LinkClass("dcn", 6.25, 1e-3)
+
+LINKS = {l.name: l for l in (GRPC_CLOUD, MPI_HPC, ICI, DCN)}
+
+
+def link_for_site(site: str) -> LinkClass:
+    return MPI_HPC if site == "hpc" else GRPC_CLOUD
+
+
+@dataclass
+class TransferRecord:
+    rnd: int
+    cid: int
+    direction: str      # up | down
+    nbytes: int
+    link: str
+    seconds: float
+
+
+@dataclass
+class CommAccountant:
+    """Collects every logical transfer of a training run."""
+    records: list = field(default_factory=list)
+
+    def log(self, rnd: int, cid: int, direction: str, nbytes: int,
+            link: LinkClass) -> float:
+        t = link.transfer_time(nbytes)
+        self.records.append(TransferRecord(rnd, cid, direction, nbytes,
+                                           link.name, t))
+        return t
+
+    def bytes_per_round(self, direction: str | None = None) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for r in self.records:
+            if direction and r.direction != direction:
+                continue
+            out[r.rnd] = out.get(r.rnd, 0) + r.nbytes
+        return out
+
+    def participants_per_round(self, direction: str = "up") -> dict[int, int]:
+        out: dict[int, int] = {}
+        for r in self.records:
+            if r.direction == direction:
+                out[r.rnd] = out.get(r.rnd, 0) + 1
+        return out
+
+    def total_bytes(self) -> int:
+        return sum(r.nbytes for r in self.records)
+
+    def mean_bytes_per_client_round(self) -> float:
+        ups = [r for r in self.records if r.direction == "up"]
+        if not ups:
+            return 0.0
+        rounds = len({r.rnd for r in ups})
+        clients = max(len({r.cid for r in ups}), 1)
+        return sum(r.nbytes for r in ups) / max(rounds, 1) / clients

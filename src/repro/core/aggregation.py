@@ -1,0 +1,51 @@
+"""Aggregation strategies for federated updates (paper §4.4).
+
+Operates on stacked client deltas (leading client dim C) or on streaming
+(sequential-scan) accumulators.  Supported:
+  * fedavg          — mask/weight-normalised mean (weights = data sizes),
+  * weighted        — dynamic weights from data size x inverse training loss,
+  * trimmed_mean    — coordinate-wise trimmed mean (beyond-paper robustness,
+                      §6 "adversarial behavior" future work),
+plus hierarchical (pod-local then cross-pod) composition used with
+compressed cross-pod transfer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def effective_weights(weights, mask, losses=None, mode: str = "fedavg"):
+    """[C] weights combined with the participation mask (and losses)."""
+    w = weights * mask
+    if mode == "weighted" and losses is not None:
+        w = w / (1.0 + jnp.maximum(losses, 0.0))
+    return w
+
+
+def weighted_mean(deltas, w):
+    """deltas: pytree with leading client dim C;  w: [C]."""
+    denom = jnp.maximum(w.sum(), 1e-12)
+
+    def agg(d):
+        wb = w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return (d * wb).sum(0) / denom.astype(d.dtype)
+
+    return jax.tree.map(agg, deltas)
+
+
+def trimmed_mean(deltas, mask, trim_frac: float = 0.1):
+    """Coordinate-wise trimmed mean over clients.  Non-participating clients
+    (mask 0) contribute zero deltas, which the trimming largely discards for
+    the extreme coordinates; robust-aggregation callers should pass a full
+    mask."""
+    C = mask.shape[0]
+    k = int(trim_frac * C)
+
+    def agg(d):
+        s = jnp.sort(d, axis=0)
+        if k:
+            s = s[k:C - k]
+        return s.mean(0)
+
+    return jax.tree.map(agg, deltas)

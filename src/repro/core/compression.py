@@ -1,0 +1,168 @@
+"""Communication-efficient update compression (paper §4.3).
+
+Three techniques, applied to model-update pytrees before aggregation:
+  * gradient quantization   — blockwise symmetric int8/int4 with per-block
+                              scales (optionally stochastic rounding),
+  * update sparsification   — per-block magnitude top-k,
+  * federated dropout       — structured random neuron (output-column) masks.
+
+All are *straight-through* inside the jit'd round step: compress(x) returns
+the decompressed value the server would reconstruct, so the training math
+sees exactly the information that crossed the wire, while
+``payload_bytes()`` accounts for the bytes that transfer would need
+(used for Table 4 / ablation reproductions).
+
+Pure-jnp implementations live here; the Pallas TPU kernels
+(repro.kernels.{quantize,topk_sparsify}) are drop-in replacements selected
+with ``use_kernels=True`` and validated against these in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    quantize_bits: int = 0        # 0 (off) | 8 | 4
+    stochastic_rounding: bool = True
+    topk_frac: float = 0.0        # fraction of entries KEPT per block (0 = off)
+    dropout_frac: float = 0.0     # fraction of output neurons dropped (0 = off)
+    block: int = 256              # quant/top-k block length
+    use_kernels: bool = False     # use Pallas kernels for the hot loops
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.quantize_bits or self.topk_frac or self.dropout_frac)
+
+
+# ---------------------------------------------------------------------------
+# blockwise helpers
+#
+# Blocks are taken along the LAST dimension (padded to a block multiple),
+# never by flattening the whole tensor: flattening a 2-D-sharded parameter is
+# not layout-preserving, so under GSPMD it all-gathers the full tensor to
+# every device — measured at 529 GB/client/round for mistral-large and
+# ~7 TB for kimi-k2 before this change (EXPERIMENTS.md §Perf iteration 1).
+# Last-dim blocking reshapes [..., F] -> [..., F/block, block], which splits
+# the sharded dim onto the new major axis and stays completely local.
+# ---------------------------------------------------------------------------
+
+def _to_blocks(x, block):
+    """[..., L] -> ([..., nb, block] float32, pad)."""
+    L = x.shape[-1] if x.ndim else 1
+    x = x.reshape(x.shape or (1,)).astype(jnp.float32)
+    pad = (-L) % block
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    return x.reshape(*x.shape[:-1], (L + pad) // block, block), pad
+
+
+def _from_blocks(blocks, pad, shape, dtype):
+    y = blocks.reshape(*blocks.shape[:-2], -1)
+    if pad:
+        y = y[..., :-pad]
+    return y.reshape(shape).astype(dtype)
+
+
+def quantize_dequant(x, bits: int, block: int = 256, rng=None,
+                     stochastic: bool = True, use_kernel: bool = False):
+    """Blockwise symmetric quantization round-trip."""
+    if use_kernel and not stochastic:
+        from repro.kernels import ops as kops
+        return kops.quantize_dequant(x, bits=bits, block=block)
+    b, pad = _to_blocks(x.astype(jnp.float32), block)
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(b), axis=-1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    y = b / scale
+    if stochastic and rng is not None:
+        y = jnp.floor(y + jax.random.uniform(rng, y.shape))
+    else:
+        y = jnp.round(y)
+    y = jnp.clip(y, -qmax - 1, qmax) * scale
+    return _from_blocks(y, pad, x.shape, x.dtype)
+
+
+def topk_sparsify(x, frac: float, block: int = 256, use_kernel: bool = False):
+    """Keep the top ceil(frac*block) entries by |magnitude| per block."""
+    k = max(1, int(np.ceil(frac * block)))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.topk_sparsify(x, k=k, block=block)
+    b, pad = _to_blocks(x.astype(jnp.float32), block)
+    mag = jnp.abs(b)
+    # threshold semantics (same as the Pallas kernel): keep every entry with
+    # |x| >= the k-th largest magnitude; ties all kept.
+    thresh = -jnp.sort(-mag, axis=-1)[..., k - 1:k]
+    y = jnp.where(mag >= thresh, b, 0.0)
+    return _from_blocks(y, pad, x.shape, x.dtype)
+
+
+def federated_dropout(x, frac: float, rng):
+    """Drop a random `frac` of output neurons (last dim), rescale the rest."""
+    if x.ndim < 2:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - frac, (x.shape[-1],))
+    return jnp.where(keep, x / (1.0 - frac), 0.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# tree-level API
+# ---------------------------------------------------------------------------
+
+def compress_tree(tree, cfg: CompressionConfig, rng):
+    """Straight-through compression of an update pytree."""
+    if not cfg.enabled:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for leaf, r in zip(leaves, rngs):
+        y = leaf
+        r1, r2 = jax.random.split(r)
+        if cfg.dropout_frac:
+            y = federated_dropout(y, cfg.dropout_frac, r1)
+        if cfg.topk_frac:
+            y = topk_sparsify(y, cfg.topk_frac, cfg.block,
+                              use_kernel=cfg.use_kernels)
+        if cfg.quantize_bits:
+            y = quantize_dequant(y, cfg.quantize_bits, cfg.block, rng=r2,
+                                 stochastic=cfg.stochastic_rounding,
+                                 use_kernel=cfg.use_kernels)
+        out.append(y.astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def payload_bytes(tree, cfg: Optional[CompressionConfig]) -> int:
+    """Bytes one client's update costs on the wire under `cfg`.
+
+    Uncompressed: dtype bytes per element.  Quantized: bits/8 per element +
+    one f32 scale per block.  Top-k: only k entries (+4-byte indices) per
+    block survive.  Dropout removes a frac of columns entirely.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(np.prod(leaf.shape))
+        if cfg is None or not cfg.enabled:
+            total += n * jnp.dtype(leaf.dtype).itemsize
+            continue
+        frac_cols = 1.0 - (cfg.dropout_frac if leaf.ndim >= 2 else 0.0)
+        n_eff = n * frac_cols
+        if cfg.topk_frac:
+            k = max(1, int(np.ceil(cfg.topk_frac * cfg.block)))
+            per_entry_bits = (cfg.quantize_bits or
+                              jnp.dtype(leaf.dtype).itemsize * 8) + 32  # + index
+            n_blocks = np.ceil(n_eff / cfg.block)
+            total += int(n_blocks * k * per_entry_bits / 8 + n_blocks * 4)
+        elif cfg.quantize_bits:
+            n_blocks = np.ceil(n_eff / cfg.block)
+            total += int(n_eff * cfg.quantize_bits / 8 + n_blocks * 4)
+        else:
+            total += int(n_eff * jnp.dtype(leaf.dtype).itemsize)
+    return total

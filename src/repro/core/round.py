@@ -1,0 +1,284 @@
+"""The jit'd federated round step — the paper's Algorithm 1 lines 5-12.
+
+``build_fl_round_step`` closes over the model loss, client/server optimizers,
+aggregation strategy, and compression config, and returns one pure function:
+
+    round_step(global_params, server_state, client_batches, weights, mask, rng)
+        -> (new_params, new_server_state, metrics)
+
+client_batches leaves are [C, H, ...] (C clients, H local steps).  ``mask``
+[C] (0/1) implements deadline cutoff / fastest-k / dropouts decided host-side
+by the orchestrator, so one compiled step serves every round.
+
+Client execution modes (DESIGN.md §2):
+  * parallel   — vmap over clients; client dim sharded over the batch mesh
+                 axes (pod x data).  Aggregation lowers to the cross-client
+                 psum — the client->server "transfer".  Hierarchical
+                 compression: pod-local mean, compress, cross-pod mean.
+  * sequential — lax.scan over clients; each client's local batch uses the
+                 full mesh.  Required when C parallel model replicas cannot
+                 fit HBM (>=100B-param archs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.compression import CompressionConfig, compress_tree
+from repro.models import sharding as shd
+from repro.optim import Optimizer, ServerOptimizer
+
+
+def _axes_tuple(ax):
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    num_clients: int = 8              # clients per round (C)
+    local_steps: int = 2              # H local epochs/steps per round
+    client_lr: float = 0.05
+    fedprox_mu: float = 0.0           # 0 -> FedAvg; >0 -> FedProx proximal term
+    aggregation: str = "fedavg"       # fedavg | weighted | trimmed_mean
+    client_exec: str = "parallel"     # parallel | sequential | pod_sequential
+    compression: CompressionConfig = field(default_factory=CompressionConfig)
+    hierarchical: bool = False        # pod-local then compressed cross-pod agg
+    accum_dtype: str = "float32"      # sequential-mode delta accumulator
+    use_fused_update: bool = False    # Pallas fedprox_update kernel
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_add_scaled(a, b, s):
+    return jax.tree.map(lambda x, y: x + s * y.astype(x.dtype), a, b)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def constrain_like(tree, shardings):
+    """Pin a pytree (grads / deltas / accumulators) to the parameter
+    shardings.  Without this GSPMD materialises weight grads REPLICATED
+    (full f32 all-reduce per layer, measured 5.2 GB/layer bwd for
+    mistral-large) instead of reduce-scattering to the FSDP layout —
+    EXPERIMENTS.md §Perf iteration 2."""
+    if shardings is None:
+        return tree
+
+    def apply(x, s):
+        if s is None:
+            return x
+        ndim = len(s.spec) if hasattr(s, "spec") else None
+        if ndim is not None and x.ndim != ndim:
+            # under vmap (parallel/pod_sequential) the tracer carries a
+            # mapped leading dim; constraining it to the unmapped spec would
+            # force replication across the mapped mesh axis (measured: +H x
+            # cross-pod grad traffic).  Skip — the batched case relies on
+            # propagation instead.
+            return x
+        return jax.lax.with_sharding_constraint(x, s)
+
+    return jax.tree.map(apply, tree, shardings)
+
+
+def build_local_train(loss_fn: Callable, client_opt: Optimizer, cfg: FLConfig,
+                      param_shardings=None):
+    """Returns local_train(global_params, batches_H, rng) -> (delta, mean_loss).
+
+    FedProx (mu>0): the proximal term mu/2 ||w - w0||^2 enters as the exact
+    gradient correction mu (w - w0) — cheaper than autodiff through the norm
+    and fusable into the Pallas fedprox_update kernel."""
+
+    def local_train(global_params, batches, rng):
+        opt0 = client_opt.init(global_params)
+
+        def step(carry, xs):
+            w, opt_state, loss_sum = carry
+            batch, r = xs
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(w, batch)
+            grads = constrain_like(grads, param_shardings)
+            if cfg.use_fused_update and client_opt.name == "sgd":
+                from repro.kernels import ops as kops
+                w = jax.tree.map(
+                    lambda wi, gi, w0i: kops.fedprox_update(
+                        wi, gi, w0i, lr=cfg.client_lr, mu=cfg.fedprox_mu),
+                    w, grads, global_params)
+            else:
+                if cfg.fedprox_mu:
+                    grads = jax.tree.map(
+                        lambda gi, wi, w0i: gi + cfg.fedprox_mu *
+                        (wi - w0i).astype(gi.dtype),
+                        grads, w, global_params)
+                w, opt_state = client_opt.update(grads, opt_state, w, cfg.client_lr)
+            return (w, opt_state, loss_sum + loss), None
+
+        rngs = jax.random.split(rng, cfg.local_steps)
+        (w, _, loss_sum), _ = jax.lax.scan(
+            step, (global_params, opt0, jnp.float32(0.0)), (batches, rngs))
+        delta = constrain_like(tree_sub(w, global_params), param_shardings)
+        return delta, loss_sum / cfg.local_steps
+
+    return local_train
+
+
+def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
+                        server_opt: ServerOptimizer, cfg: FLConfig,
+                        n_pods: int = 1, param_shardings=None,
+                        client_spmd_axes=None):
+    """client_spmd_axes: mesh axis name(s) the vmapped client (or pod) dim is
+    sharded over.  Without it GSPMD replicates every per-client/per-pod
+    intermediate (weights included!) across the mapped axis — measured as
+    ~600 MB cross-pod all-gathers of the per-pod weight copies per layer per
+    step (EXPERIMENTS.md §Perf iteration 4)."""
+    local_train = build_local_train(loss_fn, client_opt, cfg, param_shardings)
+    C = cfg.num_clients
+
+    def compress(delta, rng):
+        return compress_tree(delta, cfg.compression, rng)
+
+    # ------------------------------------------------------------- parallel
+    def round_parallel(global_params, server_state, client_batches, weights,
+                       mask, rng):
+        def client_fn(gp, b, r):
+            # the mapped client dim owns client_spmd_axes; model-internal
+            # constraints must not mention them inside the vmap body
+            with shd.exclude_axes(*_axes_tuple(client_spmd_axes)):
+                return local_train(gp, b, r)
+
+        rngs = jax.random.split(rng, C)
+        deltas, losses = jax.vmap(client_fn, in_axes=(None, 0, 0),
+                                  spmd_axis_name=client_spmd_axes)(
+            global_params, client_batches, rngs)
+        w = agg.effective_weights(weights, mask, losses, cfg.aggregation)
+        if cfg.aggregation == "trimmed_mean":
+            delta = agg.trimmed_mean(deltas, mask)
+        elif cfg.hierarchical and n_pods > 1:
+            # pod-local weighted mean -> compress -> cross-pod mean.
+            per_pod = C // n_pods
+
+            def pod_mean(d):
+                wb = w.reshape(n_pods, per_pod)
+                dp = d.reshape((n_pods, per_pod) + d.shape[1:])
+                num = (dp * wb.reshape(wb.shape + (1,) * (d.ndim - 1)).astype(d.dtype)).sum(1)
+                return num  # [n_pods, ...] un-normalised pod sums
+
+            pod_sums = jax.tree.map(pod_mean, deltas)
+            crng = jax.random.split(rng, n_pods)
+            pod_sums = jax.vmap(lambda t, r: compress(t, r))(pod_sums, crng)
+            denom = jnp.maximum(w.sum(), 1e-12)
+            delta = jax.tree.map(lambda d: d.sum(0) / denom.astype(d.dtype), pod_sums)
+        else:
+            crng = jax.random.split(rng, C)
+            deltas = jax.vmap(compress)(deltas, crng)
+            delta = agg.weighted_mean(deltas, w)
+        new_params, new_state = server_opt.apply(global_params, delta, server_state)
+        metrics = {
+            "client_loss": (losses * mask).sum() / jnp.maximum(mask.sum(), 1),
+            "delta_norm": global_norm(delta),
+            "participation": mask.mean(),
+        }
+        return new_params, new_state, metrics
+
+    # ----------------------------------------------------------- sequential
+    def round_sequential(global_params, server_state, client_batches, weights,
+                         mask, rng):
+        accum_dt = jnp.dtype(cfg.accum_dtype)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt), global_params)
+
+        def client_body(carry, xs):
+            acc, wsum, loss_sum = carry
+            batch_c, w_c, m_c, r = xs
+            delta, loss = local_train(global_params, batch_c, r)
+            delta = compress(delta, r)
+            wt = agg.effective_weights(w_c[None], m_c[None],
+                                       loss[None], cfg.aggregation)[0]
+            acc = constrain_like(jax.tree.map(
+                lambda a, d: a + wt.astype(accum_dt) * d.astype(accum_dt),
+                acc, delta), param_shardings)
+            return (acc, wsum + wt, loss_sum + loss * m_c), None
+
+        rngs = jax.random.split(rng, C)
+        (acc, wsum, loss_sum), _ = jax.lax.scan(
+            client_body, (zero, jnp.float32(0.0), jnp.float32(0.0)),
+            (client_batches, weights, mask, rngs))
+        delta = jax.tree.map(lambda a: a / jnp.maximum(wsum, 1e-12).astype(a.dtype),
+                             acc)
+        new_params, new_state = server_opt.apply(global_params, delta, server_state)
+        metrics = {
+            "client_loss": loss_sum / jnp.maximum(mask.sum(), 1),
+            "delta_norm": global_norm(delta),
+            "participation": mask.mean(),
+        }
+        return new_params, new_state, metrics
+
+    # ------------------------------------------------------- pod_sequential
+    # Clients are pinned to pods (sites): the client dim is split [P, C/P]
+    # and vmapped over the `pod` mesh axis while each pod scans its own
+    # clients sequentially.  During local training NO traffic crosses pods
+    # (each client's batch is sharded over `data` within its pod only);
+    # pods exchange exactly one compressed delta per round — the paper's
+    # hierarchical HPC-site/cloud-site topology (EXPERIMENTS.md §Perf it. 4).
+    def round_pod_sequential(global_params, server_state, client_batches,
+                             weights, mask, rng):
+        P = n_pods
+        Cp = C // P
+        accum_dt = jnp.dtype(cfg.accum_dtype)
+
+        def pod_body(batches_p, w_p, m_p, rng_p):
+            with shd.exclude_axes(*_axes_tuple(client_spmd_axes)):
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt),
+                                    global_params)
+
+                def client_body(carry, xs):
+                    acc, wsum, loss_sum = carry
+                    batch_c, w_c, m_c, r = xs
+                    delta, loss = local_train(global_params, batch_c, r)
+                    wt = agg.effective_weights(w_c[None], m_c[None],
+                                               loss[None], cfg.aggregation)[0]
+                    acc = jax.tree.map(
+                        lambda a, d: a + wt.astype(accum_dt)
+                        * d.astype(accum_dt), acc, delta)
+                    return (acc, wsum + wt, loss_sum + loss * m_c), None
+
+                rngs = jax.random.split(rng_p, Cp)
+                (acc, wsum, loss_sum), _ = jax.lax.scan(
+                    client_body, (zero, jnp.float32(0.0), jnp.float32(0.0)),
+                    (batches_p, w_p, m_p, rngs))
+                # compress the POD-level sum — this is what crosses the slow
+                # cross-pod link (paper: compress on WAN, not Infiniband)
+                acc = compress(acc, rng_p)
+                return acc, wsum, loss_sum
+
+        resh = jax.tree.map(
+            lambda x: x.reshape((P, Cp) + x.shape[1:]), client_batches)
+        w2 = weights.reshape(P, Cp)
+        m2 = mask.reshape(P, Cp)
+        rngs = jax.random.split(rng, P)
+        accs, wsums, loss_sums = jax.vmap(
+            pod_body, spmd_axis_name=client_spmd_axes)(resh, w2, m2, rngs)
+        denom = jnp.maximum(wsums.sum(), 1e-12)
+        delta = jax.tree.map(lambda a: (a.sum(0) / denom.astype(a.dtype)),
+                             accs)
+        new_params, new_state = server_opt.apply(global_params, delta,
+                                                 server_state)
+        metrics = {
+            "client_loss": loss_sums.sum() / jnp.maximum(mask.sum(), 1),
+            "delta_norm": global_norm(delta),
+            "participation": mask.mean(),
+        }
+        return new_params, new_state, metrics
+
+    return {"parallel": round_parallel,
+            "sequential": round_sequential,
+            "pod_sequential": round_pod_sequential}[cfg.client_exec]

@@ -1,0 +1,84 @@
+"""Secure aggregation via pairwise additive masking (Bonawitz et al. 2017),
+the paper's §6 "Secure aggregation" future-work item, implemented as an
+optional layer over the round step.
+
+Each participating client (i) adds, for every other participant (j), a
+pseudorandom mask PRF(seed_ij) with sign sgn(j-i); all masks cancel in the
+sum, so the orchestrator learns ONLY the aggregate — never an individual
+update.  Dropout handling uses the standard seed-reveal: masks are only
+applied between pairs of clients that both participate (simulated: the
+jit'd round knows the final participation vector, standing in for the
+reveal round).
+
+This is a faithful *functional* implementation of the protocol algebra
+(masking, cancellation, dropout unwinding).  The Diffie-Hellman key
+agreement and Shamir secret sharing of the real protocol are outside an
+offline container's scope; the symmetric seed matrix stands in for the
+agreed keys.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_seeds(round_seed: int, num_clients: int) -> np.ndarray:
+    """[C, C] symmetric int32 seed matrix (seed_ij == seed_ji), host-side —
+    stands in for per-pair DH-agreed keys."""
+    rng = np.random.default_rng(round_seed)
+    m = rng.integers(0, 2**31 - 1, (num_clients, num_clients), np.int64)
+    sym = np.triu(m, 1)
+    return (sym + sym.T).astype(np.int32)
+
+
+def _pair_mask(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def mask_update(update_tree, client_idx: int, seeds, participation):
+    """Add client `client_idx`'s pairwise masks.  participation: [C] 0/1 —
+    masks are only exchanged between pairs that both participate."""
+    C = seeds.shape[0]
+
+    def mask_leaf(leaf):
+        total = jnp.zeros(leaf.shape, jnp.float32)
+        for j in range(C):
+            if j == client_idx:
+                continue
+            m = _pair_mask(seeds[client_idx, j], leaf.shape)
+            sign = 1.0 if client_idx < j else -1.0
+            total = total + sign * m * participation[j]
+        total = total * participation[client_idx]
+        return (leaf.astype(jnp.float32) + total).astype(leaf.dtype)
+
+    return jax.tree.map(mask_leaf, update_tree)
+
+
+def aggregate_masked(masked_updates, participation):
+    """Sum masked updates over the leading client dim: pairwise masks cancel
+    among participants, recovering sum(participating updates) exactly."""
+    def agg(d):
+        p = participation.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return (d * p).sum(0)
+    return jax.tree.map(agg, masked_updates)
+
+
+def secure_weighted_mean(updates, weights, participation, seeds):
+    """End-to-end: mask each client's (pre-weighted) update, aggregate, and
+    normalise.  `updates` leaves have leading client dim C."""
+    C = seeds.shape[0]
+
+    def weighted(d):
+        w = (weights * participation).reshape(
+            (-1,) + (1,) * (d.ndim - 1)).astype(jnp.float32)
+        return d.astype(jnp.float32) * w
+
+    pre = jax.tree.map(weighted, updates)
+    masked = [mask_update(jax.tree.map(lambda x: x[i], pre), i, seeds,
+                          participation) for i in range(C)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masked)
+    total = aggregate_masked(stacked, participation)
+    denom = jnp.maximum((weights * participation).sum(), 1e-12)
+    return jax.tree.map(lambda t: t / denom, total)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (  # noqa: F401
+    Dataset, cifar10_like, medmnist_like, shakespeare_like, lm_token_batch,
+)
+from repro.data.partition import (  # noqa: F401
+    partition_by_class, partition_by_group, partition_dirichlet,
+    partition_quantity_skew,
+)
+from repro.data.federated import FederatedDataset  # noqa: F401

@@ -1,0 +1,67 @@
+"""Federated dataset: per-client data shards + round-batch sampling.
+
+The jit'd round step consumes stacked client batches [C, H, b, ...]; this
+module owns the host-side sampling that produces them, keeping raw data
+"local" to each client shard (the privacy boundary of the paper: only model
+updates cross client boundaries — batches never leave this object except to
+the local-train step of the owning client)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+
+@dataclass
+class FederatedDataset:
+    data: Dataset
+    client_indices: list[np.ndarray]
+    seed: int = 0
+    _rngs: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self._rngs = [np.random.default_rng(self.seed + 31 * c)
+                      for c in range(self.num_clients)]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_indices)
+
+    def client_size(self, c: int) -> int:
+        return len(self.client_indices[c])
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.array([self.client_size(c) for c in range(self.num_clients)],
+                        np.float32)
+
+    def sample_round(self, client_ids: list[int], local_steps: int,
+                     batch_size: int) -> dict:
+        """Stacked batches for the round: leaves [C, H, b, ...]."""
+        xs, ys = [], []
+        for c in client_ids:
+            idx = self.client_indices[c]
+            take = self._rngs[c].choice(idx, (local_steps, batch_size),
+                                        replace=len(idx) < local_steps * batch_size)
+            xs.append(self.data.x[take])
+            ys.append(self.data.y[take] if self.data.y is not None else None)
+        x = np.stack(xs)
+        if self.data.kind == "text":
+            return {"tokens": x[..., :-1].astype(np.int32),
+                    "targets": x[..., 1:].astype(np.int32)}
+        return {"image": x.astype(np.float32),
+                "label": np.stack(ys).astype(np.int32)}
+
+    def eval_batch(self, n: int = 2048, seed: int = 123) -> dict:
+        """Centralised held-out evaluation batch (paper §5.3 'Model Accuracy:
+        test accuracy on a centralized evaluation dataset')."""
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(self.data.x), n, replace=False)
+        x = self.data.x[idx]
+        if self.data.kind == "text":
+            return {"tokens": x[..., :-1].astype(np.int32),
+                    "targets": x[..., 1:].astype(np.int32)}
+        return {"image": x.astype(np.float32),
+                "label": self.data.y[idx].astype(np.int32)}

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (§4.3 compression
+pipeline + the Mamba selective scan), validated interpret=True on CPU:
+
+  quantize.py        blockwise int8/int4 symmetric quantize->dequantize
+  topk_sparsify.py   per-block magnitude top-k (bisection threshold, VPU)
+  fedprox_update.py  fused w <- w - lr*(g + mu*(w - w0))
+  selective_scan.py  chunked Mamba recurrence (VMEM-resident time loop)
+
+ops.py: jit'd public wrappers (padding, dtype, custom VJP for the scan).
+ref.py: pure-jnp oracles — the correctness contract for tests.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,126 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles flattening/padding to tile multiples, dtype plumbing, interpret-mode
+selection (interpret=True on CPU — the container validates kernel *bodies*;
+TPU is the deployment target), and the custom VJP for the selective scan
+(the only kernel that sits under autodiff: compression/update kernels run on
+post-gradient values).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedprox_update as _fp
+from repro.kernels import quantize as _q
+from repro.kernels import ref as _ref
+from repro.kernels import selective_scan as _ss
+from repro.kernels import topk_sparsify as _tk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _as_blocks(x, block):
+    """Blocks along the LAST dim (matches core.compression's shard-local
+    grouping), then collapse leading dims to rows for the kernel grid."""
+    L = x.shape[-1] if x.ndim else 1
+    xx = x.reshape(x.shape or (1,)).astype(jnp.float32)
+    pad = (-L) % block
+    if pad:
+        xx = jnp.pad(xx, [(0, 0)] * (xx.ndim - 1) + [(0, pad)])
+    rows_shape = xx.shape[:-1] + ((L + pad) // block,)
+    b = xx.reshape(-1, block)
+    rows_pad = (-b.shape[0]) % _q.ROWS_TILE
+    if rows_pad:
+        b = jnp.concatenate([b, jnp.zeros((rows_pad, block), b.dtype)])
+    return b, (pad, rows_pad, rows_shape)
+
+
+def _from_blocks(b, meta, shape, dtype):
+    pad, rows_pad, rows_shape = meta
+    if rows_pad:
+        b = b[:-rows_pad]
+    y = b.reshape(*rows_shape, -1).reshape(*rows_shape[:-1], -1)
+    if pad:
+        y = y[..., :-pad]
+    return y.reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def quantize_dequant(x, *, bits: int = 8, block: int = 256):
+    xb, pad = _as_blocks(x, block)
+    y = _q.quantize_dequant_blocks(xb, bits, _interpret())
+    return _from_blocks(y, pad, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def topk_sparsify(x, *, k: int, block: int = 256):
+    xb, pad = _as_blocks(x, block)
+    # padded zero blocks: threshold 0 keeps everything -> zeros stay zero. OK.
+    y = _tk.topk_sparsify_blocks(xb, k, _interpret())
+    return _from_blocks(y, pad, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "mu"))
+def fedprox_update(w, g, w0, *, lr: float, mu: float = 0.0):
+    shape, dtype = w.shape, w.dtype
+    n = int(jnp.size(w)) if not hasattr(w, "size") else w.size
+    flat = lambda t: t.reshape(-1).astype(jnp.float32)
+    wf, gf, w0f = flat(w), flat(g), flat(w0)
+    tile = min(_fp.TILE, max(wf.shape[0], 1))
+    pad = (-wf.shape[0]) % tile
+    if pad:
+        z = jnp.zeros((pad,), jnp.float32)
+        wf, gf, w0f = (jnp.concatenate([a, z]) for a in (wf, gf, w0f))
+    y = _fp.fedprox_update_flat(wf, gf, w0f, lr, mu, _interpret())
+    if pad:
+        y = y[:-pad]
+    return y.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# selective scan with custom VJP (forward = Pallas kernel; backward = the
+# reverse-time linear recurrence via associative scan)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def selective_scan_chunk(a, b, h0):
+    hs, hl = _ss.selective_scan_chunk_kernel(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        h0.astype(jnp.float32), _interpret())
+    return hs, hl
+
+
+def _ss_fwd(a, b, h0):
+    hs, hl = selective_scan_chunk(a, b, h0)
+    return (hs, hl), (a, hs, h0)
+
+
+def _ss_bwd(res, cot):
+    a, hs, h0 = res
+    g_hs, g_hl = cot
+    # total gradient at each t: G_t = g_hs_t + a_{t+1} G_{t+1}; G_L += g_hl
+    g = g_hs.at[:, -1].add(g_hl)
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+
+    def combine(c1, c2):  # reverse-time scan
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    ar = jnp.flip(a_next, axis=1)
+    gr = jnp.flip(g, axis=1)
+    aa, bb = jax.lax.associative_scan(combine, (ar, gr), axis=1)
+    G = jnp.flip(bb, axis=1)                       # [B,L,D,N]
+    h_prev = jnp.concatenate([h0[:, None], hs[:, :-1]], axis=1)
+    ga = G * h_prev
+    gb = G
+    gh0 = a[:, 0] * G[:, 0]
+    return ga, gb, gh0
+
+
+selective_scan_chunk.defvjp(_ss_fwd, _ss_bwd)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _blocks_lastdim(x, block):
+    """Shared grouping rule: blocks along the last dim, zero-padded."""
+    shape, dtype = x.shape, x.dtype
+    L = shape[-1] if x.ndim else 1
+    xx = x.reshape(shape or (1,)).astype(jnp.float32)
+    pad = (-L) % block
+    if pad:
+        xx = jnp.pad(xx, [(0, 0)] * (xx.ndim - 1) + [(0, pad)])
+    return xx.reshape(*xx.shape[:-1], -1, block), pad, shape, dtype
+
+
+def _unblocks(b, pad, shape, dtype):
+    y = b.reshape(*b.shape[:-2], -1)
+    if pad:
+        y = y[..., :-pad]
+    return y.reshape(shape).astype(dtype)
+
+
+def quantize_dequant_ref(x, bits: int, block: int = 256):
+    """Deterministic blockwise symmetric quantization round-trip."""
+    b, pad, shape, dtype = _blocks_lastdim(x, block)
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(b), axis=-1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    y = jnp.clip(jnp.round(b / scale), -qmax - 1, qmax) * scale
+    return _unblocks(y, pad, shape, dtype)
+
+
+def topk_sparsify_ref(x, k: int, block: int = 256):
+    """Keep entries with |x| >= (k-th largest magnitude) per block."""
+    b, pad, shape, dtype = _blocks_lastdim(x, block)
+    mag = jnp.abs(b)
+    thresh = -jnp.sort(-mag, axis=-1)[..., k - 1:k]
+    y = jnp.where(mag >= thresh, b, 0.0)
+    return _unblocks(y, pad, shape, dtype)
+
+
+def fedprox_update_ref(w, g, w0, lr: float, mu: float):
+    return (w.astype(jnp.float32) - lr * (g.astype(jnp.float32) +
+            mu * (w.astype(jnp.float32) - w0.astype(jnp.float32)))).astype(w.dtype)
+
+
+def selective_scan_chunk_ref(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t over the chunk dim (axis=1)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    hs = aa * h0[:, None] + bb
+    return hs, hs[:, -1]

@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first init).  This module is the ONLY place the 512-placeholder-
+# device configuration exists; tests/benchmarks see the single real CPU.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.core import CompressionConfig, FLConfig, build_fl_round_step  # noqa: E402
+from repro.launch import specs as sp  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model, sharding as sh  # noqa: E402
+from repro.models.common import logical_to_pspec_tree  # noqa: E402
+from repro.optim import get_client_optimizer, get_server_optimizer  # noqa: E402
+
+# Archs small enough to host parallel client replicas (true hierarchical FL);
+# the rest time-multiplex clients sequentially (DESIGN.md §2).
+PARALLEL_ARCHS = {"xlstm-125m", "gemma-2b", "granite-3-2b", "musicgen-medium",
+                  "starcoder2-7b"}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+               "u16": 2, "c64": 8, "c128": 16}
+
+
+# ---------------------------------------------------------------------------
+# HLO text analysis: collective bytes with while-loop trip-count multipliers
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)[^{]*\([^)]*\)\s*->", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if (line.startswith("ENTRY") or
+                (not line.startswith(" ") and "{" in line and "->" in line
+                 and stripped.startswith("%"))):
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            cur_name = ("__entry__" if line.startswith("ENTRY")
+                        else (m.group(1) if m else stripped[:40]))
+            cur_lines = [line]
+        elif cur_name:
+            cur_lines.append(line)
+    if cur_name:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def trip_count(cond_text: str) -> int:
+    """Canonical XLA while-cond: compare(ind_var, constant(N)) — take the
+    largest integer constant as the trip count (conservative upper bound)."""
+    consts = [int(c) for c in _CONST_CMP_RE.findall(cond_text)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                             r"(?:T\(([\d,]+)\))?")
+
+
+def crosses_pods(line: str, pod_stride: int) -> bool:
+    """True if the collective's replica groups span devices >= pod_stride
+    apart (i.e. traffic crosses the pod/DCN boundary)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        return bool(ids) and max(ids) - min(ids) >= pod_stride
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota groups [G, S]<=[dims](T(perm)): group = S consecutive entries
+        # of the (transposed) iota.  The group spans pods iff the minor
+        # (fastest-varying) S elements cover an index jump >= pod_stride.
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else list(range(len(dims))))
+        import numpy as _np
+        ids = _np.arange(int(_np.prod(dims))).reshape(dims).transpose(perm)
+        ids = ids.reshape(g, s)
+        return bool((ids.max(1) - ids.min(1) >= pod_stride).any())
+    return False
+
+
+def collective_bytes(hlo: str, pod_stride: int = 256) -> dict:
+    """Per-collective-kind bytes, execution-weighted by while trip counts.
+    Each kind also gets a '<kind>/cross_pod' entry for traffic whose replica
+    groups span the pod boundary (DCN, not ICI)."""
+    comps = split_computations(hlo)
+
+    def comp_cost(name: str, seen) -> dict:
+        if name in seen:
+            return {}
+        seen = seen | {name}
+        text = comps.get(name, "")
+        out: dict[str, float] = {}
+        for line in text.splitlines():
+            s = line.strip()
+            for kind in COLLECTIVE_OPS:
+                if f" {kind}(" in s or s.startswith(f"{kind}("):
+                    # output type(s) appear between '=' and the op name
+                    lhs = s.split(f"{kind}(")[0]
+                    eq = lhs.find("=")
+                    b = shape_bytes(lhs[eq + 1:])
+                    out[kind] = out.get(kind, 0) + b
+                    if crosses_pods(s, pod_stride):
+                        key = kind + "/cross_pod"
+                        out[key] = out.get(key, 0) + b
+                    break
+            m = _WHILE_RE.search(s)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                tc = trip_count(comps.get(cond, ""))
+                for k, v in comp_cost(body, seen).items():
+                    out[k] = out.get(k, 0) + tc * v
+        return out
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps), "")
+    res = comp_cost(entry, frozenset())
+    return {k: int(v) for k, v in res.items()}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train(model, cfg, shape, mesh, multi_pod, clients, local_steps):
+    parallel = cfg.name in PARALLEL_ARCHS
+    n_pods = 2 if multi_pod else 1
+    C = clients or ((32 if multi_pod else 16) if parallel else 4)
+    H = local_steps
+    if parallel:
+        exec_mode = "parallel"
+    elif multi_pod:
+        exec_mode = "pod_sequential"   # clients pinned to pods (sites)
+    else:
+        exec_mode = "sequential"
+    fl_cfg = FLConfig(
+        num_clients=C, local_steps=H, client_lr=0.01, fedprox_mu=0.01,
+        aggregation="fedavg",
+        client_exec=exec_mode,
+        compression=CompressionConfig(quantize_bits=8),
+        hierarchical=parallel and multi_pod,
+        accum_dtype="bfloat16")
+    bspecs, blog_par, blog_seq = sp.train_client_batch_specs(cfg, shape, C, H)
+    blog = blog_par if parallel else blog_seq
+    if exec_mode == "pod_sequential":
+        # client dim over `pod`, per-client batch over `data` only
+        def podify(logical):
+            e = list(logical)
+            e[0] = sh.POD
+            e[2] = sh.DATA
+            return tuple(e)
+        blog = jax.tree.map(podify, blog,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    param_sds = model.param_specs()
+    param_sh = sp.sanitize_specs(param_sds, model.logical_specs, mesh)
+    # param-sharding constraints only in (non-vmapped) sequential mode;
+    # vmapped modes declare the mapped dim's mesh axes via spmd_axis_name
+    # instead (EXPERIMENTS.md §Perf iteration 4).
+    if exec_mode == "parallel":
+        spmd_axes = ("pod", "data") if multi_pod else "data"
+    elif exec_mode == "pod_sequential":
+        spmd_axes = "pod"
+    else:
+        spmd_axes = None
+    step = build_fl_round_step(
+        model.loss_fn, get_client_optimizer("sgd"),
+        get_server_optimizer("fedavg"), fl_cfg, n_pods=n_pods,
+        param_shardings=param_sh if exec_mode == "sequential" else None,
+        client_spmd_axes=spmd_axes)
+    batch_sh = sp.sanitize_specs(bspecs, blog, mesh)
+    vec = jax.ShapeDtypeStruct((C,), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    args = (param_sds, (), bspecs, vec, vec, key)
+    in_sh = (param_sh, (), batch_sh, repl(mesh), repl(mesh), repl(mesh))
+    out_sh = (param_sh, (), None)
+    meta = {"clients": C, "local_steps": H,
+            "client_exec": fl_cfg.client_exec,
+            "hierarchical": fl_cfg.hierarchical}
+    return step, args, in_sh, out_sh, meta
+
+
+def build_prefill(model, cfg, shape, mesh):
+    bspecs, blog = sp.prefill_batch_specs(cfg, shape)
+    param_sds = model.param_specs()
+    param_sh = sp.sanitize_specs(param_sds, model.logical_specs, mesh)
+    batch_sh = sp.sanitize_specs(bspecs, blog, mesh)
+    state_sh = sp.sanitize_specs(
+        model.decode_state_specs(shape.global_batch, shape.seq_len),
+        model.state_logical_specs(shape.global_batch, shape.seq_len), mesh)
+
+    def step(params, batch):
+        return model.prefill(params, batch, s_max=shape.seq_len)
+
+    return (step, (param_sds, bspecs), (param_sh, batch_sh),
+            (None, state_sh), {})
+
+
+def build_decode(model, cfg, shape, mesh):
+    (token, tok_log, state, state_log, patches,
+     patches_log) = sp.decode_inputs_specs(cfg, shape, model)
+    param_sds = model.param_specs()
+    param_sh = sp.sanitize_specs(param_sds, model.logical_specs, mesh)
+    tok_sh = sp.sanitize_specs(token, tok_log, mesh)
+    state_sh = sp.sanitize_specs(state, state_log, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if patches is not None:
+        patch_sh = sp.sanitize_specs(patches, patches_log, mesh)
+
+        def step(params, st, tok, p, patch):
+            return model.decode_step(params, st, tok, p, patch)
+
+        return (step, (param_sds, state, token, pos, patches),
+                (param_sh, state_sh, tok_sh, repl(mesh), patch_sh),
+                (None, state_sh), {})
+
+    def step(params, st, tok, p):
+        return model.decode_step(params, st, tok, p)
+
+    return (step, (param_sds, state, token, pos),
+            (param_sh, state_sh, tok_sh, repl(mesh)),
+            (None, state_sh), {})
+
+
+# ---------------------------------------------------------------------------
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return ("full-attention arch without sliding-window/SSM variant; "
+                "long_500k requires a sub-quadratic decode path "
+                "(DESIGN.md long_500k skips)")
+    return None
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+            groups: int = 0, clients: int = 0, local_steps: int = 1,
+            verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__G{groups}" if groups else "")
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "groups_override": groups, "tag": tag}
+
+    skip = should_skip(cfg, shape)
+    if skip:
+        result["skipped"] = skip
+        _write(out_dir, tag, result)
+        return result
+
+    if groups:
+        from repro.models.transformer import block_pattern
+        period = len(block_pattern(cfg))
+        cfg = cfg.replace(n_layers=groups * period)
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result["n_devices"] = int(np.prod(list(mesh.shape.values())))
+
+    with sh.use_mesh(mesh):
+        if shape.kind == "train":
+            step, args, in_sh, out_sh, meta = build_train(
+                model, cfg, shape, mesh, multi_pod, clients, local_steps)
+        elif shape.kind == "prefill":
+            step, args, in_sh, out_sh, meta = build_prefill(model, cfg, shape, mesh)
+        else:
+            step, args, in_sh, out_sh, meta = build_decode(model, cfg, shape, mesh)
+        result.update(meta)
+
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+        result["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t0, 2)
+
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        result["cost_analysis"] = {
+            "flops": float(ca.get("flops", -1)) if ca else -1,
+            "bytes_accessed": float(ca.get("bytes accessed", -1)) if ca else -1,
+            "note": "XLA HloCostAnalysis counts while bodies once; see "
+                    "benchmarks/costmodel.py for trip-count-corrected terms",
+        }
+        try:
+            ma = compiled.memory_analysis()
+            result["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes") if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not implement it
+            result["memory_analysis"] = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        if os.environ.get("REPRO_DUMP_HLO"):
+            (out_dir / f"{tag}.hlo.txt").parent.mkdir(parents=True,
+                                                      exist_ok=True)
+            (out_dir / f"{tag}.hlo.txt").write_text(hlo)
+        result["collective_bytes"] = collective_bytes(hlo)
+        result["collective_ops_static"] = {
+            k: hlo.count(f" {k}(") for k in COLLECTIVE_OPS}
+        result["hlo_chars"] = len(hlo)
+
+    _write(out_dir, tag, result)
+    if verbose:
+        cb = sum(result["collective_bytes"].values())
+        print(f"[dryrun] {tag}: lower {result['lower_s']}s "
+              f"compile {result['compile_s']}s "
+              f"collectives {cb/1e9:.2f} GB "
+              f"temp {result['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.2f} GB")
+    return result
+
+
+def _write(out_dir: Path, tag: str, result: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--groups", type=int, default=0,
+                    help="override n_layers = groups*period (cost decomposition)")
+    ap.add_argument("--clients", type=int, default=0)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp, Path(args.out), groups=args.groups,
+                            clients=args.clients, local_steps=args.local_steps)
+                except Exception as e:
+                    tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                    print(f"[dryrun] FAILED {tag}: {type(e).__name__}: {e}")
+                    _write(Path(args.out), tag,
+                           {"arch": arch, "shape": shape,
+                            "mesh": "multi" if mp else "single", "tag": tag,
+                            "error": f"{type(e).__name__}: {str(e)[:2000]}"})
+                jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

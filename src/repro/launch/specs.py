@@ -1,0 +1,109 @@
+"""ShapeDtypeStruct input stand-ins + sharding-spec plumbing for AOT
+lowering (no device allocation) — deliverable (e)/(f) machinery.
+
+`sanitize_specs` is the single divisibility gate: any dim whose size does not
+divide by the mesh extent of its logical axes falls back to replicated (e.g.
+batch=1 in long_500k, kv_heads < 16, the 36-head starcoder2 attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape
+from repro.configs.base import ModelConfig
+from repro.models import sharding as sh
+from repro.models.transformer import LM
+
+
+def resolve_logical(logical, mesh: Mesh):
+    return tuple(sh.resolve(e, mesh) for e in logical)
+
+
+def sanitize_entry(shape, logical, mesh: Mesh) -> P:
+    entries = []
+    for dim, ent in enumerate(logical):
+        r = sh.resolve(ent, mesh)
+        if r is None:
+            entries.append(None)
+            continue
+        axes = (r,) if isinstance(r, str) else tuple(r)
+        extent = int(np.prod([mesh.shape[a] for a in axes]))
+        if shape[dim] % extent != 0:
+            entries.append(None)
+        else:
+            entries.append(r)
+    return P(*entries)
+
+
+def sanitize_specs(shape_tree, logical_tree, mesh: Mesh):
+    """Tree of NamedShardings matching shape_tree's structure.  The logical
+    tree has tuple leaves, so flatten it with an explicit is_leaf."""
+    s_flat, treedef = jax.tree.flatten(shape_tree)
+    l_flat, _ = jax.tree.flatten(logical_tree,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    assert len(s_flat) == len(l_flat), (len(s_flat), len(l_flat))
+    out = [NamedSharding(mesh, sanitize_entry(s.shape, l, mesh))
+           for s, l in zip(s_flat, l_flat)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _tok_dtype():
+    return jnp.int32
+
+
+def train_client_batch_specs(cfg: ModelConfig, shape: InputShape,
+                             num_clients: int, local_steps: int):
+    """[C, H, b, ...] stacked client batches + logical shardings."""
+    C, H = num_clients, local_steps
+    b = shape.global_batch // C
+    S = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    tok_shape = (C, H, b, S, cfg.n_codebooks) if cfg.n_codebooks else (C, H, b, S)
+    specs = {"tokens": sds(tok_shape, _tok_dtype()),
+             "targets": sds(tok_shape, _tok_dtype())}
+    # parallel mode shards the client dim C over BATCH; sequential shards the
+    # within-client batch b.  sanitize_specs drops whichever does not divide.
+    tok_logical = ((sh.BATCH, None, None, None, None) if cfg.n_codebooks
+                   else (sh.BATCH, None, None, None))
+    seq_logical = ((None, None, sh.BATCH, None, None) if cfg.n_codebooks
+                   else (None, None, sh.BATCH, None))
+    logical = {"tokens": tok_logical, "targets": tok_logical}
+    logical_seq = {"tokens": seq_logical, "targets": seq_logical}
+    if cfg.cross_attn_every:
+        specs["patches"] = sds((C, H, b, cfg.n_patches, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        logical["patches"] = (sh.BATCH, None, None, None, sh.MODEL)
+        logical_seq["patches"] = (None, None, sh.BATCH, None, sh.MODEL)
+    return specs, logical, logical_seq
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape):
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    specs = {"tokens": sds(tok_shape, _tok_dtype())}
+    logical = {"tokens": (sh.BATCH,) + (None,) * (len(tok_shape) - 1)}
+    if cfg.cross_attn_every:
+        specs["patches"] = sds((B, cfg.n_patches, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        logical["patches"] = (sh.BATCH, None, sh.MODEL)
+    return specs, logical
+
+
+def decode_inputs_specs(cfg: ModelConfig, shape: InputShape, model: LM):
+    """(token, pos, state, patches?) specs for serve_step."""
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, cfg.n_codebooks) if cfg.n_codebooks else (B,)
+    token = sds(tok_shape, _tok_dtype())
+    token_logical = (sh.BATCH,) + (None,) * (len(tok_shape) - 1)
+    state = model.decode_state_specs(B, S)
+    state_logical = model.state_logical_specs(B, S)
+    patches = patches_logical = None
+    if cfg.cross_attn_every:
+        patches = sds((B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        patches_logical = (sh.BATCH, None, sh.MODEL)
+    return (token, token_logical, state, state_logical, patches,
+            patches_logical)

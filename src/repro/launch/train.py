@@ -1,0 +1,146 @@
+"""Federated training launcher — the deployable entry point (deliverable b).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --dataset cifar10 --algo fedprox --rounds 100 \
+        --clients-pool 60 --clients-per-round 20 --local-steps 5 \
+        --quantize-bits 8 --topk-frac 0.1 --fastest-k 16 \
+        --checkpoint-dir ckpts/run1 --render-jobs artifacts/jobs
+
+Defaults mirror the paper's §5.1 configuration (60-node hybrid fleet,
+20 clients/round, 5 local epochs, 100 rounds).  --render-jobs additionally
+emits the sbatch scripts / pod manifests the scheduler adapter would submit
+for each selected client (deployability artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import CompressionConfig, FLConfig
+from repro.data import (FederatedDataset, cifar10_like, medmnist_like,
+                        partition_by_class, partition_by_group,
+                        shakespeare_like)
+from repro.models import build_model
+from repro.models.cnn import CIFAR_CNN, CNN, MEDMNIST_CNN
+from repro.orchestrator import (FaultConfig, Orchestrator, StragglerPolicy,
+                                make_hybrid_fleet)
+from repro.sched import HybridAdapter, JobSpec
+
+
+def build_task(name: str, n_clients: int, seed: int):
+    if name == "cifar10":
+        ds = cifar10_like(n=20_000, seed=seed)
+        parts = partition_by_class(ds.y, n_clients, 2, seed=seed)
+        model = CNN(CIFAR_CNN)
+    elif name == "medmnist":
+        ds = medmnist_like(n=12_000, seed=seed)
+        parts = partition_by_class(ds.y, n_clients, 3, seed=seed)
+        model = CNN(MEDMNIST_CNN)
+    elif name == "shakespeare":
+        ds = shakespeare_like(n_seqs=8000, seq_len=64, n_speakers=2 * n_clients,
+                              seed=seed)
+        parts = partition_by_group(ds.y, n_clients, seed=seed)
+        model = build_model(get_config("paper-charlm"))
+    else:
+        raise ValueError(name)
+    fed = FederatedDataset(ds, parts, seed=seed)
+    params = model.init(jax.random.PRNGKey(seed))
+    if hasattr(model, "accuracy"):
+        eval_batch = jax.tree.map(jnp.asarray, fed.eval_batch(1024))
+        acc = jax.jit(model.accuracy)
+        eval_fn = lambda p: acc(p, eval_batch)
+    else:
+        eval_fn = None
+    return fed, model, params, eval_fn
+
+
+def render_jobs(fleet, out_dir: Path):
+    hy = HybridAdapter()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for c in fleet:
+        spec = JobSpec(
+            name=f"fl-client-{c.cid}",
+            command=f"python -m repro.worker --client-id {c.cid}",
+            gpus_per_node=1 if c.profile.compute_tflops > 4 else 0,
+            mem_gb=int(c.profile.memory_gb), site=c.site,
+            preemptible=c.profile.spot)
+        h = hy.submit(spec)
+        ext = "sbatch" if c.site == "hpc" else "json"
+        (out_dir / f"client{c.cid:03d}.{ext}").write_text(h.artifact)
+    return len(fleet)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="cifar10",
+                    choices=["cifar10", "medmnist", "shakespeare"])
+    ap.add_argument("--algo", default="fedavg", choices=["fedavg", "fedprox"])
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients-pool", type=int, default=60)
+    ap.add_argument("--clients-per-round", type=int, default=20)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=0.08)
+    ap.add_argument("--mu", type=float, default=0.02)
+    ap.add_argument("--quantize-bits", type=int, default=0)
+    ap.add_argument("--topk-frac", type=float, default=0.0)
+    ap.add_argument("--fed-dropout", type=float, default=0.0)
+    ap.add_argument("--fastest-k", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=0.0)
+    ap.add_argument("--dropout-prob", type=float, default=0.0)
+    ap.add_argument("--server-opt", default="fedavg",
+                    choices=["fedavg", "fedadam", "fedyogi"])
+    ap.add_argument("--selection", default="adaptive",
+                    choices=["adaptive", "random"])
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--render-jobs", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    fed, model, params, eval_fn = build_task(args.dataset, args.clients_pool,
+                                             args.seed)
+    fl = FLConfig(
+        num_clients=args.clients_per_round, local_steps=args.local_steps,
+        client_lr=args.lr, fedprox_mu=args.mu if args.algo == "fedprox" else 0.0,
+        compression=CompressionConfig(quantize_bits=args.quantize_bits,
+                                      topk_frac=args.topk_frac,
+                                      dropout_frac=args.fed_dropout))
+    fleet = make_hybrid_fleet(args.clients_pool // 2,
+                              args.clients_pool - args.clients_pool // 2,
+                              seed=args.seed,
+                              data_sizes=[fed.client_size(c)
+                                          for c in range(fed.num_clients)])
+    if args.render_jobs:
+        n = render_jobs(fleet, Path(args.render_jobs))
+        print(f"rendered {n} scheduler artifacts -> {args.render_jobs}")
+    orch = Orchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
+        server_opt_name=args.server_opt, selection_name=args.selection,
+        straggler=StragglerPolicy(deadline_s=args.deadline_s,
+                                  fastest_k=args.fastest_k),
+        faults=FaultConfig(dropout_prob=args.dropout_prob),
+        batch_size=args.batch_size, flops_per_client_round=3e12,
+        eval_fn=eval_fn, eval_every=10,
+        checkpoint_mgr=CheckpointManager(args.checkpoint_dir)
+        if args.checkpoint_dir else None,
+        checkpoint_every=args.checkpoint_every, seed=args.seed)
+    params, _ = orch.run(params, args.rounds, verbose=True)
+    summary = {
+        "dataset": args.dataset, "algo": args.algo, "rounds": args.rounds,
+        "final_eval": orch.logs[-1].eval_metric,
+        "virtual_time_s": orch.virtual_clock,
+        "mean_bytes_per_client_round": orch.comm.mean_bytes_per_client_round(),
+    }
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.transformer import LM, build_model, param_count, active_param_count  # noqa: F401
+from repro.models import sharding  # noqa: F401

@@ -1,0 +1,149 @@
+"""Attention: GQA/MQA/MHA with RoPE, optional sliding window, chunked
+(flash-style online-softmax) computation for long sequences, and a
+flash-decoding serve path over a sequence-sharded KV cache.
+
+Layouts:
+  q        [B, S, H, hd]
+  k, v     [B, T, KV, hd]      (KV heads never repeated in memory)
+  caches   [B, S_max, KV, hd]  (decode: S_max sharded over `model`)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+
+NEG_INF = -1e30
+
+
+def _group(q, kv_heads):
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, kv_heads, H // kv_heads, hd)
+
+
+def _scores_mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def attend_full(q, k, v, *, q0: int = 0, k0: int = 0, causal=True, window=0,
+                kv_valid=None):
+    """Plain (un-chunked) GQA attention on small S.  q0/k0: position offsets."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = _group(q, KV)                                   # [B,S,KV,G,hd]
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    mask = _scores_mask(q0 + jnp.arange(S), k0 + jnp.arange(k.shape[1]), causal, window)
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", p, v)
+    return out.reshape(B, S, H, hd)
+
+
+def attend_chunked(q, k, v, *, causal=True, window=0, q_chunk=1024, kv_chunk=1024):
+    """Memory-bounded attention: outer scan over q chunks, inner scan over kv
+    chunks with online softmax.  Never materialises [S, S] scores."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = S // q_chunk, T // kv_chunk
+    assert nq * q_chunk == S and nk * kv_chunk == T, (S, T, q_chunk, kv_chunk)
+    qg = _group(q, KV).reshape(B, nq, q_chunk, KV, G, hd).swapaxes(0, 1)
+    ks = k.reshape(B, nk, kv_chunk, KV, hd).swapaxes(0, 1)
+    vs = v.reshape(B, nk, kv_chunk, KV, hd).swapaxes(0, 1)
+    scale = hd ** -0.5
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx                              # [B,qc,KV,G,hd]
+        q0 = iq * q_chunk
+
+        def kv_step(carry, kv_and_idx):
+            m, l, acc = carry
+            (kc, vc), ik = kv_and_idx                    # [B,kc,KV,hd]
+            k0 = ik * kv_chunk
+            s = jnp.einsum("bqngd,bknd->bngqk", qi, kc)
+            s = s.astype(jnp.float32) * scale            # [B,KV,G,qc,kc]
+            msk = _scores_mask(q0 + jnp.arange(q_chunk), k0 + jnp.arange(kv_chunk),
+                               causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngqk,bknd->bngqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, ((ks, vs), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,KV,G,qc,hd]
+        return None, out.transpose(0, 3, 1, 2, 4)        # [B,qc,KV,G,hd]
+
+    _, outs = jax.lax.scan(q_step, None, (qg, jnp.arange(nq)))
+    out = outs.swapaxes(0, 1).reshape(B, S, H, hd).astype(q.dtype)
+    return out
+
+
+def attend(q, k, v, *, causal=True, window=0, chunk_threshold=2048,
+           q_chunk=1024, kv_chunk=1024):
+    if q.shape[1] <= chunk_threshold:
+        return attend_full(q, k, v, causal=causal, window=window)
+    return attend_chunked(q, k, v, causal=causal, window=window,
+                          q_chunk=min(q_chunk, q.shape[1]),
+                          kv_chunk=min(kv_chunk, k.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Decode (one query token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attend(q1, k_cache, v_cache, pos, *, window=0):
+    """q1 [B,H,hd]; caches [B,S,KV,hd]; pos scalar index of the current token
+    (caches already contain the current token's k/v at `pos`, or, for ring
+    buffers, at pos % S).  Softmax over the cache dim; under a mesh the cache
+    S dim is `model`-sharded so this lowers to flash-decoding psum merges."""
+    B, S, KV, hd = k_cache.shape
+    H = q1.shape[1]
+    qg = q1.reshape(B, KV, H // KV, hd)
+    s = jnp.einsum("bngd,btnd->bngt", qg, k_cache).astype(jnp.float32)
+    s *= hd ** -0.5
+    idx = jnp.arange(S)
+    if window:
+        # ring buffer of size S == window: once full, every slot holds one of
+        # the last S tokens (incl. current) and is valid.
+        valid = jnp.where(pos + 1 >= S, jnp.ones((S,), jnp.bool_), idx <= pos)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q1.dtype)
+    out = jnp.einsum("bngt,btnd->bngd", p, v_cache)
+    return out.reshape(B, H, hd)
+
+
+def cache_write(cache, new, pos):
+    """Write new [B,1,KV,hd] at slot `pos` (caller handles ring modulo)."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), pos, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM): kv from patch embeddings, no mask/rope.
+# ---------------------------------------------------------------------------
+
+def cross_attend(q, k, v):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = _group(q, KV)
+    s = jnp.einsum("bsngd,btnd->bngst", qg, k).astype(jnp.float32) * hd ** -0.5
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", p, v)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,73 @@
+"""The paper's experiment models for image tasks: a CIFAR-scale CNN and a
+MedMNIST-scale classifier (§5.2).  Same (params, batch) -> (loss, aux) API
+as the LM zoo so the FL round step is model-agnostic."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamBuilder
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: tuple          # (H, W, C)
+    num_classes: int
+    channels: tuple = (32, 64)
+    dense: int = 256
+
+
+CIFAR_CNN = CNNConfig("paper-cifar-cnn", (32, 32, 3), 10)
+MEDMNIST_CNN = CNNConfig("paper-medmnist-cnn", (28, 28, 1), 9,
+                         channels=(16, 32), dense=128)
+
+
+class CNN:
+    def __init__(self, cfg: CNNConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        pb = ParamBuilder(rng, jnp.float32)
+        c_in = cfg.in_shape[-1]
+        h, w = cfg.in_shape[:2]
+        for i, c_out in enumerate(cfg.channels):
+            pb.add({}, [f"conv{i}_w"], (3, 3, c_in, c_out), (None,) * 4,
+                   scale=0.1)
+            pb.add({}, [f"conv{i}_b"], (c_out,), (None,), init="zeros")
+            c_in = c_out
+            h, w = h // 2, w // 2
+        flat = h * w * c_in
+        pb.add({}, ["dense1_w"], (flat, cfg.dense), (None, None))
+        pb.add({}, ["dense1_b"], (cfg.dense,), (None,), init="zeros")
+        pb.add({}, ["dense2_w"], (cfg.dense, cfg.num_classes), (None, None))
+        pb.add({}, ["dense2_b"], (cfg.num_classes,), (None,), init="zeros")
+        return pb.params
+
+    def apply(self, params, x):
+        for i in range(len(self.cfg.channels)):
+            x = jax.lax.conv_general_dilated(
+                x, params[f"conv{i}_w"], window_strides=(1, 1),
+                padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + params[f"conv{i}_b"])
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["dense1_w"] + params["dense1_b"])
+        return x @ params["dense2_w"] + params["dense2_b"]
+
+    def loss_fn(self, params, batch):
+        logits = self.apply(params, batch["image"])
+        labels = batch["label"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        loss = (lse - picked).mean()
+        acc = (logits.argmax(-1) == labels).mean()
+        return loss, {"acc": acc}
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["image"])
+        return (logits.argmax(-1) == batch["label"]).mean()

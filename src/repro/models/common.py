@@ -1,0 +1,159 @@
+"""Shared building blocks: parameter construction, norms, activations, RoPE,
+losses.  Pure JAX (no flax/optax dependency)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as sh
+
+# ---------------------------------------------------------------------------
+# Parameter construction.  Each call site declares the *logical* sharding of
+# the parameter; ParamBuilder collects a parallel PartitionSpec tree so init
+# and sharding can never drift apart.
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    def __init__(self, rng: jax.Array, dtype, abstract: bool = False):
+        self.rng = rng
+        self.dtype = dtype
+        self.abstract = abstract          # True -> ShapeDtypeStruct leaves only
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def _split(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    def add(self, tree: dict, path: list[str], shape, logical, init="normal",
+            scale: float | None = None):
+        """Create one parameter at params[path]; record its logical spec."""
+        if self.abstract:
+            val = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        elif init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            val = (jax.random.normal(self._split(), shape, jnp.float32) * s).astype(self.dtype)
+        elif callable(init):
+            val = init(self._split(), shape).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        node, snode = self.params, self.specs
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+            snode = snode.setdefault(k, {})
+        node[path[-1]] = val
+        snode[path[-1]] = tuple(logical)
+        return val
+
+
+def logical_to_pspec_tree(spec_tree, mesh):
+    """Convert a tree of logical-axis tuples to PartitionSpecs for `mesh`."""
+    def conv(logical):
+        if mesh is None:
+            return P()
+        return P(*(sh.resolve(e, mesh) for e in logical))
+    return jax.tree.map(conv, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def act_fn(name: str) -> Callable:
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+def glu_mlp(x, w1, w3, w2, act: str):
+    """Gated MLP. act in {swiglu, geglu}; w3 is the gate projection."""
+    inner = act_fn({"swiglu": "silu", "geglu": "gelu"}[act])
+    h = inner(x @ w1) * (x @ w3)
+    h = sh.shard(h, sh.BATCH, None, sh.MODEL)
+    return h @ w2
+
+
+def plain_mlp(x, w1, w2, act: str):
+    h = act_fn(act)(x @ w1)
+    h = sh.shard(h, sh.BATCH, None, sh.MODEL)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., T, ..., hd] with positions broadcastable to x's T dim.
+
+    positions: [T] or [B, T] int32.  x layout [B, T, H, hd].
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))            # [hd/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [T, hd/2] or [B,T,hd/2]
+    while ang.ndim < x.ndim:                              # align to [B,T,H,hd/2]
+        ang = ang[..., None, :] if ang.ndim == x.ndim - 1 else ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy_logits(logits, targets, vocab: int, chunk: int = 0):
+    """Mean next-token CE.  logits [B,S,Vp] (Vp >= vocab, padded cols masked),
+    targets [B,S].  If chunk>0 the S dim is processed in chunks to bound the
+    f32 log-softmax workspace (vocab-heavy archs, e.g. 256k gemma)."""
+    vp = logits.shape[-1]
+
+    def ce(lg, tg):
+        lg = lg.astype(jnp.float32)
+        if vp > vocab:
+            mask = (jnp.arange(vp) >= vocab) * -1e9
+            lg = lg + mask
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+        return lse - picked
+
+    if chunk and logits.shape[1] > chunk:
+        B, S = targets.shape[:2]
+        n = S // chunk
+        lg = logits[:, : n * chunk].reshape(B, n, chunk, vp).swapaxes(0, 1)
+        tg = targets[:, : n * chunk].reshape(B, n, chunk, *targets.shape[2:]).swapaxes(0, 1)
+        tot = jax.lax.scan(lambda c, xs: (c + ce(xs[0], xs[1]).sum(), None),
+                           jnp.float32(0.0), (lg, tg))[0]
+        rem = S - n * chunk
+        if rem:
+            tot = tot + ce(logits[:, n * chunk:], targets[:, n * chunk:]).sum()
+        return tot / targets.size
+    return ce(logits, targets).mean()
+
+
+def take_embedding(table, tokens):
+    """Embedding lookup.  Table is [V, D] with V replicated (D may be
+    model-sharded) so the gather stays local on every shard."""
+    return jnp.take(table, tokens, axis=0)

@@ -1,0 +1,149 @@
+"""Mamba (S6) block: selective state-space model with chunked scan.
+
+The training path uses a *chunked* selective scan (lax.scan over chunks,
+associative scan inside a chunk) so the [B, S, d_inner, d_state] tensor is
+never materialised — only [B, chunk, d_inner, d_state].  The inner chunk is
+also available as a Pallas kernel (repro.kernels.selective_scan); this module
+calls the pure-jnp path by default and the kernel when
+``use_kernel=True`` (tests assert they match).
+
+d_inner is sharded over `model`; the scan is sequential over S only, so the
+recurrence needs no cross-shard communication (recurrent-scan sharding).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig
+from repro.models import sharding as sh
+
+
+def dt_rank(d_model: int, cfg: MambaConfig) -> int:
+    return cfg.dt_rank or math.ceil(d_model / 16)
+
+
+def init_mamba(builder, path, d_model: int, cfg: MambaConfig, n_groups: int):
+    di = cfg.expand * d_model
+    R = dt_rank(d_model, cfg)
+    N = cfg.d_state
+    g = (n_groups,) if n_groups else ()
+    pre = (None,) if n_groups else ()
+    add = builder.add
+    add({}, path + ["in_proj"], g + (d_model, 2 * di), pre + (sh.DATA, sh.MODEL))
+    add({}, path + ["conv_w"], g + (cfg.d_conv, di), pre + (None, sh.MODEL))
+    add({}, path + ["conv_b"], g + (di,), pre + (sh.MODEL,), init="zeros")
+    add({}, path + ["x_proj"], g + (di, R + 2 * N), pre + (sh.MODEL, None))
+    add({}, path + ["dt_proj"], g + (R, di), pre + (None, sh.MODEL))
+    add({}, path + ["dt_bias"], g + (di,), pre + (sh.MODEL,),
+        init=lambda k, s: jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k, s, jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))))
+    add({}, path + ["A_log"], g + (di, N), pre + (sh.MODEL, None),
+        init=lambda k, s: jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), s))
+    add({}, path + ["D"], g + (di,), pre + (sh.MODEL,), init="ones")
+    add({}, path + ["out_proj"], g + (di, d_model), pre + (sh.MODEL, sh.DATA))
+
+
+def _ssm_coeffs(x, p, cfg: MambaConfig):
+    """x [B, L, di] -> decay a [B,L,di,N], drive b [B,L,di,N], C [B,L,N]."""
+    N = cfg.d_state
+    R = p["dt_proj"].shape[0]
+    proj = x @ p["x_proj"]                                  # [B,L,R+2N]
+    dt_in, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])      # [B,L,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [di, N]
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)      # [B,L,di,N]
+    b = (dt[..., None] * Bc[..., None, :]).astype(jnp.float32) * x[..., None].astype(jnp.float32)
+    return a, b, Cc
+
+
+def _chunk_scan(a, b, h0):
+    """Associative scan of h_t = a_t * h_{t-1} + b_t within one chunk.
+    a,b [B,L,di,N]; h0 [B,di,N].  Returns (h all steps, h_last)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = aa * h0[:, None] + bb
+    return h, h[:, -1]
+
+
+def selective_scan_chunked(a, b, C, h0, chunk: int, use_kernel: bool = False):
+    """Full-sequence selective scan via chunks.  a,b [B,S,di,N]; C [B,S,N].
+    Returns y [B,S,di] and final state [B,di,N]."""
+    B, S, di, N = a.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one_chunk(ac, bc, Cc, h):
+        if use_kernel:
+            from repro.kernels import ops as kops
+            hs, h_last = kops.selective_scan_chunk(ac, bc, h)
+        else:
+            hs, h_last = _chunk_scan(ac, bc, h)
+        y = jnp.einsum("bldn,bln->bld", hs, Cc.astype(hs.dtype))
+        return y, h_last
+
+    a_c = a[:, :n * chunk].reshape(B, n, chunk, di, N).swapaxes(0, 1)
+    b_c = b[:, :n * chunk].reshape(B, n, chunk, di, N).swapaxes(0, 1)
+    C_c = C[:, :n * chunk].reshape(B, n, chunk, N).swapaxes(0, 1)
+
+    def body(h, xs):
+        y, h_last = one_chunk(*xs, h)
+        return h_last, y
+
+    h_last, ys = jax.lax.scan(body, h0, (a_c, b_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(B, n * chunk, di)
+    if rem:
+        y_r, h_last = one_chunk(a[:, n * chunk:], b[:, n * chunk:],
+                                C[:, n * chunk:], h_last)
+        y = jnp.concatenate([y, y_r], axis=1)
+    return y, h_last
+
+
+def mamba_apply(p, x, *, cfg: MambaConfig, mode: str = "train", state=None,
+                use_kernel: bool = False):
+    """x [B,S,D].  mode train/prefill: full scan (prefill also returns state).
+    mode decode: x [B,1,D] with state=(conv_state [B,d_conv-1,di], h [B,di,N])."""
+    B, S, D = x.shape
+    di = cfg.expand * D
+    N = cfg.d_state
+    xz = x @ p["in_proj"]                                   # [B,S,2di]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = sh.shard(xin, sh.BATCH, None, sh.MODEL)
+
+    if mode in ("train", "prefill"):
+        # causal depthwise conv
+        pad = jnp.zeros((B, cfg.d_conv - 1, di), xin.dtype)
+        xpad = jnp.concatenate([pad, xin], axis=1)
+        conv = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(cfg.d_conv))
+        conv = jax.nn.silu(conv + p["conv_b"])
+        a, b, Cc = _ssm_coeffs(conv, p, cfg)
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        y, h_last = selective_scan_chunked(a, b, Cc, h0, cfg.chunk, use_kernel)
+        y = y.astype(x.dtype) + conv * p["D"]
+        out = (jax.nn.silu(z) * y) @ p["out_proj"]
+        if mode == "prefill":
+            # keep the last d_conv-1 raw (pre-conv) inputs for decode
+            new_state = {"conv": xpad[:, -(cfg.d_conv - 1):], "h": h_last}
+            return out, new_state
+        return out, None
+
+    # decode: single token
+    conv_state, h = state["conv"], state["h"]               # [B,dc-1,di], [B,di,N]
+    x1 = xin[:, 0]                                          # [B,di]
+    window = jnp.concatenate([conv_state, x1[:, None]], axis=1)  # [B,dc,di]
+    conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)[:, None]                       # [B,1,di]
+    a, b, Cc = _ssm_coeffs(conv, p, cfg)
+    h_new = a[:, 0] * h + b[:, 0]                           # [B,di,N]
+    y = jnp.einsum("bdn,bn->bd", h_new, Cc[:, 0].astype(h_new.dtype))
+    y = y.astype(x.dtype)[:, None] + conv * p["D"]
+    out = (jax.nn.silu(z) * y) @ p["out_proj"]
+    return out, {"conv": window[:, 1:], "h": h_new}

@@ -1,0 +1,120 @@
+"""Mesh context + sharding-constraint helpers.
+
+The model code is written once and runs in three regimes:
+  * no mesh (CPU unit tests)              -> constraints are no-ops
+  * single-pod mesh ("data", "model")     -> production single pod
+  * multi-pod mesh ("pod", "data", "model")
+
+Logical axes used by the model code:
+  BATCH  -> ("pod", "data") when pod present, else ("data",)
+  DATA   -> "data"  (FSDP / weight-gather axis)
+  MODEL  -> "model" (tensor/expert parallel axis)
+
+`shard(x, *logical)` applies with_sharding_constraint, silently dropping
+axes that do not exist in the active mesh so the same model code lowers on
+every mesh (or none).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH = "__batch__"   # data-parallel batch axis (pod+data in multi-pod)
+DATA = "data"
+MODEL = "model"
+POD = "pod"
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def excluded_axes() -> frozenset:
+    return getattr(_state, "exclude", frozenset())
+
+
+@contextlib.contextmanager
+def exclude_axes(*axes: str):
+    """Drop the given mesh axes from constraint resolution while tracing —
+    used inside vmap(..., spmd_axis_name=ax) bodies, where constraints may
+    not mention the mapped axis (it belongs to the vmapped dim)."""
+    prev = excluded_axes()
+    _state.exclude = prev | set(axes)
+    try:
+        yield
+    finally:
+        _state.exclude = prev
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def batch_axes(mesh: Optional[Mesh] = None):
+    """Mesh axes that together shard the global batch."""
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        return ()
+    axes = (POD, DATA) if POD in mesh.axis_names else (DATA,)
+    return tuple(a for a in axes if a not in excluded_axes())
+
+
+def resolve(spec_entry, mesh: Mesh):
+    """Map a logical axis entry to concrete mesh axes (or None)."""
+    excl = excluded_axes()
+    if spec_entry is None:
+        return None
+    if spec_entry == BATCH:
+        ax = batch_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    if isinstance(spec_entry, (tuple, list)):
+        kept = tuple(a for a in spec_entry
+                     if a in mesh.axis_names and a not in excl)
+        return kept if kept else None
+    return (spec_entry if spec_entry in mesh.axis_names
+            and spec_entry not in excl else None)
+
+
+def pspec(*logical) -> P:
+    mesh = get_mesh()
+    if mesh is None:
+        return P()
+    return P(*(resolve(e, mesh) for e in logical))
+
+
+def named_sharding(*logical) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, pspec(*logical))
+
+
+def shard(x, *logical):
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec(*logical)))
+
+
+def axis_size(name: str) -> int:
+    mesh = get_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

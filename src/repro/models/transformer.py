@@ -1,0 +1,473 @@
+"""Composable decoder LM covering all assigned architecture families.
+
+A config is compiled to a *block pattern* (list of slots, each slot =
+mixer + optional FFN); layers are executed as ``lax.scan`` over
+``n_layers / len(pattern)`` groups with layer-stacked parameters, keeping the
+HLO small for 60-100 layer models.
+
+Families:
+  dense/audio : attn + mlp                      (audio: codebook embeds/heads)
+  moe         : attn + moe
+  hybrid      : mamba/attn interleave + mlp/moe (jamba)
+  vlm         : attn + cross-attn every Nth     (llama-3.2-vision)
+  ssm         : mlstm/slstm blocks              (xlstm)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import cached_property, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import sharding as sh
+from repro.models import xlstm as xlstm_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (ParamBuilder, cross_entropy_logits, glu_mlp,
+                                 plain_mlp, rms_norm, apply_rope,
+                                 take_embedding)
+
+
+@dataclass(frozen=True)
+class Slot:
+    mixer: str          # attn | cross | mamba | mlstm | slstm
+    ffn: str            # mlp | moe | none
+
+
+def block_pattern(cfg: ModelConfig) -> list[Slot]:
+    if cfg.xlstm is not None:
+        p = cfg.xlstm.slstm_every
+        return [Slot("slstm" if i % p == p - 1 else "mlstm", "none")
+                for i in range(p)]
+    period = 1
+    if cfg.attn_every:
+        period = cfg.attn_every
+    if cfg.cross_attn_every:
+        period = math.lcm(period, cfg.cross_attn_every)
+    if cfg.moe is not None:
+        period = math.lcm(period, cfg.moe.every)
+    slots = []
+    for i in range(period):
+        if cfg.attn_every:
+            mixer = "attn" if i % cfg.attn_every == cfg.attn_every - 1 else "mamba"
+        elif cfg.cross_attn_every:
+            mixer = "cross" if i % cfg.cross_attn_every == cfg.cross_attn_every - 1 else "attn"
+        else:
+            mixer = "attn"
+        ffn = "mlp"
+        if cfg.moe is not None and i % cfg.moe.every == cfg.moe.every - 1:
+            ffn = "moe"
+        slots.append(Slot(mixer, ffn))
+    return slots
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, unroll: bool = False):
+        self.cfg = cfg
+        self.pattern = block_pattern(cfg)
+        assert cfg.n_layers % len(self.pattern) == 0, (
+            cfg.name, cfg.n_layers, len(self.pattern))
+        self.n_groups = cfg.n_layers // len(self.pattern)
+        # unroll=True replaces the scan-over-groups with a python loop —
+        # used to validate the analytic cost model against cost_analysis()
+        # (XLA counts while bodies once, so only unrolled builds measure
+        # true totals).
+        self.unroll = unroll
+        # shard attention heads over `model` only when divisible by the
+        # largest production model-axis (16); else attention is replicated
+        # across `model` (MLP stays TP) — see DESIGN.md §6.
+        self.attn_tp = cfg.n_heads % 16 == 0
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng):
+        params, _ = self._build_concrete(rng)
+        return params
+
+    @cached_property
+    def logical_specs(self):
+        """Tree of logical-axis tuples (same structure as params)."""
+        _, specs = self._build_concrete(jax.random.PRNGKey(0), abstract=True)
+        return specs
+
+    def param_specs(self):
+        """Tree of ShapeDtypeStruct (for AOT lowering without allocation)."""
+        params, _ = self._build_concrete(jax.random.PRNGKey(0), abstract=True)
+        return params
+
+    def _build_concrete(self, rng, abstract: bool = False):
+        cfg = self.cfg
+        pb = ParamBuilder(rng, self.dtype, abstract=abstract)
+        D, V = cfg.d_model, cfg.vocab
+        Vp = cfg.vocab_padded
+        H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+        G = self.n_groups
+        emb_scale = 1.0 / math.sqrt(D)
+
+        if cfg.n_codebooks:
+            pb.add({}, ["embed"], (cfg.n_codebooks, V, D), (None, None, sh.MODEL),
+                   scale=emb_scale)
+            pb.add({}, ["unembed"], (D, cfg.n_codebooks * Vp), (sh.DATA, sh.MODEL))
+        else:
+            pb.add({}, ["embed"], (V, D), (None, sh.MODEL), scale=emb_scale)
+            pb.add({}, ["unembed"], (D, Vp), (sh.DATA, sh.MODEL))
+        pb.add({}, ["final_norm"], (D,), (None,), init="ones")
+
+        model_ax = sh.MODEL if self.attn_tp else None
+        for si, slot in enumerate(self.pattern):
+            base = ["layers", f"slot{si}"]
+            pb.add({}, base + ["norm1"], (G, D), (None, None), init="ones")
+            if slot.mixer in ("attn", "cross"):
+                pb.add({}, base + ["wq"], (G, D, H * hd), (None, sh.DATA, model_ax))
+                pb.add({}, base + ["wk"], (G, D, KV * hd), (None, sh.DATA, None))
+                pb.add({}, base + ["wv"], (G, D, KV * hd), (None, sh.DATA, None))
+                pb.add({}, base + ["wo"], (G, H * hd, D), (None, model_ax, sh.DATA))
+            elif slot.mixer == "mamba":
+                mamba_mod.init_mamba(pb, base + ["mamba"], D, cfg.mamba, G)
+            elif slot.mixer == "mlstm":
+                xlstm_mod.init_mlstm(pb, base + ["mlstm"], D, H, cfg.xlstm, G)
+            elif slot.mixer == "slstm":
+                xlstm_mod.init_slstm(pb, base + ["slstm"], D, H, G)
+            if slot.ffn != "none":
+                pb.add({}, base + ["norm2"], (G, D), (None, None), init="ones")
+            if slot.ffn == "mlp":
+                F = cfg.d_ff
+                pb.add({}, base + ["w1"], (G, D, F), (None, sh.DATA, sh.MODEL))
+                if cfg.act in ("swiglu", "geglu"):
+                    pb.add({}, base + ["w3"], (G, D, F), (None, sh.DATA, sh.MODEL))
+                pb.add({}, base + ["w2"], (G, F, D), (None, sh.MODEL, sh.DATA))
+            elif slot.ffn == "moe":
+                moe_mod.init_moe(pb, base + ["moe"], D, cfg.moe, G)
+        return pb.params, pb.specs
+
+    # -------------------------------------------------------------- embedding
+    def embed(self, params, tokens):
+        if self.cfg.n_codebooks:
+            # tokens [B, S, n_cb] -> summed codebook embeddings
+            parts = [take_embedding(params["embed"][c], tokens[..., c])
+                     for c in range(self.cfg.n_codebooks)]
+            x = sum(parts)
+        else:
+            x = take_embedding(params["embed"], tokens)
+        return sh.shard(x, sh.BATCH, None, None)
+
+    def logits(self, params, x):
+        lg = x @ params["unembed"]
+        if self.cfg.n_codebooks:
+            lg = lg.reshape(*lg.shape[:-1], self.cfg.n_codebooks, self.cfg.vocab_padded)
+        return lg
+
+    # ------------------------------------------------------------------ slots
+    def _attn(self, p, x, *, positions, window, mode, cache=None, pos=None,
+              patches=None, cross=False):
+        cfg = self.cfg
+        B, S, D = x.shape
+        H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+        q = (x @ p["wq"]).reshape(B, S, H, hd)
+        if cross:
+            kv_src = patches.astype(x.dtype)
+            if mode == "decode":
+                k, v = cache["k"], cache["v"]
+            else:
+                k = (kv_src @ p["wk"]).reshape(B, -1, KV, hd)
+                v = (kv_src @ p["wv"]).reshape(B, -1, KV, hd)
+            out = attn.cross_attend(q, k, v)
+            new_cache = {"k": k, "v": v} if mode in ("prefill", "decode") else None
+            return (out.reshape(B, S, H * hd) @ p["wo"]), new_cache
+
+        k = (x @ p["wk"]).reshape(B, S, KV, hd)
+        v = (x @ p["wv"]).reshape(B, S, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+        if mode == "decode":
+            S_c = cache["k"].shape[1]
+            slot = pos % S_c if window else pos
+            kc = attn.cache_write(cache["k"], k, slot)
+            vc = attn.cache_write(cache["v"], v, slot)
+            kc = sh.shard(kc, sh.BATCH, sh.MODEL, None, None)
+            vc = sh.shard(vc, sh.BATCH, sh.MODEL, None, None)
+            out = attn.decode_attend(q[:, 0], kc, vc, pos, window=window)
+            out = out[:, None]                       # [B,1,H,hd]
+            new_cache = {"k": kc, "v": vc}
+        else:
+            gq = H // KV
+            ke = jnp.repeat(k, gq, axis=2)
+            ve = jnp.repeat(v, gq, axis=2)
+            m_ax = sh.MODEL if self.attn_tp else None
+            q = sh.shard(q, sh.BATCH, None, m_ax, None)
+            ke = sh.shard(ke, sh.BATCH, None, m_ax, None)
+            ve = sh.shard(ve, sh.BATCH, None, m_ax, None)
+            out = attn.attend(q, ke, ve, causal=True, window=window)
+            new_cache = None
+            if mode == "prefill":
+                S_max = cache["k"].shape[1]
+                if window:
+                    # fill ring buffer with the last `window` positions
+                    start = S - S_max if S >= S_max else 0
+                    ks, vs = k[:, start:], v[:, start:]
+                    # place so that slot = pos % S_max lines up
+                    roll = (start % S_max)
+                    kc = jnp.zeros_like(cache["k"]).at[:, :ks.shape[1]].set(
+                        ks.astype(cache["k"].dtype))
+                    vc = jnp.zeros_like(cache["v"]).at[:, :vs.shape[1]].set(
+                        vs.astype(cache["v"].dtype))
+                    kc = jnp.roll(kc, roll, axis=1)
+                    vc = jnp.roll(vc, roll, axis=1)
+                else:
+                    kc = attn.cache_write(cache["k"],
+                                          k.astype(cache["k"].dtype), 0)
+                    vc = attn.cache_write(cache["v"],
+                                          v.astype(cache["v"].dtype), 0)
+                new_cache = {"k": kc, "v": vc}
+        return (out.reshape(B, S, H * hd) @ p["wo"]), new_cache
+
+    def _ffn(self, slot, p, x, mode):
+        cfg = self.cfg
+        if slot.ffn == "mlp":
+            if cfg.act in ("swiglu", "geglu"):
+                return glu_mlp(x, p["w1"], p["w3"], p["w2"], cfg.act), 0.0
+            return plain_mlp(x, p["w1"], p["w2"], cfg.act), 0.0
+        moe_mode = "gather_tokens" if mode == "decode" else "gather_weights"
+        return moe_mod.moe_apply(p["moe"], x, cfg=cfg.moe, act=cfg.act,
+                                 mode=moe_mode)
+
+    def _apply_slot(self, slot: Slot, p, x, *, mode, positions=None, cache=None,
+                    pos=None, patches=None):
+        cfg = self.cfg
+        aux = 0.0
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        window = cfg.sliding_window
+        if slot.mixer in ("attn", "cross"):
+            out, new_cache = self._attn(
+                p, h, positions=positions, window=window if slot.mixer == "attn" else 0,
+                mode=mode, cache=cache, pos=pos, patches=patches,
+                cross=slot.mixer == "cross")
+        elif slot.mixer == "mamba":
+            out, new_cache = mamba_mod.mamba_apply(
+                p["mamba"], h, cfg=cfg.mamba, mode=mode, state=cache)
+        elif slot.mixer == "mlstm":
+            out, new_cache = xlstm_mod.mlstm_apply(
+                p["mlstm"], h, n_heads=cfg.n_heads, cfg=cfg.xlstm, mode=mode,
+                state=cache)
+        elif slot.mixer == "slstm":
+            out, new_cache = xlstm_mod.slstm_apply(
+                p["slstm"], h, n_heads=cfg.n_heads, mode=mode, state=cache)
+        else:
+            raise ValueError(slot.mixer)
+        x = x + out
+        if slot.ffn != "none":
+            h = rms_norm(x, p["norm2"], cfg.norm_eps)
+            out, aux = self._ffn(slot, p, h, mode)
+            x = x + out
+        x = sh.shard(x, sh.BATCH, None, None)
+        return x, new_cache, aux
+
+    # ---------------------------------------------------------------- forward
+    def _backbone(self, params, x, *, mode, positions=None, caches=None,
+                  pos=None, patches=None, remat=True):
+        """Scan over layer groups.  Returns (x, new_caches, aux_sum)."""
+        n_slots = len(self.pattern)
+
+        def group_fn(carry, xs):
+            x, aux = carry
+            gp, gc = xs
+            new_c = {}
+            for si, slot in enumerate(self.pattern):
+                key = f"slot{si}"
+                c = gc.get(key) if gc is not None else None
+                x, nc, a = self._apply_slot(
+                    slot, gp[key], x, mode=mode, positions=positions,
+                    cache=c, pos=pos, patches=patches)
+                aux = aux + a
+                if nc is not None:
+                    new_c[key] = nc
+            return (x, aux), new_c
+
+        fn = jax.checkpoint(group_fn) if (remat and mode == "train") else group_fn
+        caches_xs = caches if caches is not None else {}
+        if self.unroll:
+            carry = (x, jnp.float32(0.0))
+            outs = []
+            for g in range(self.n_groups):
+                xs = jax.tree.map(lambda a: a[g],
+                                  (params["layers"], caches_xs))
+                carry, yc = fn(carry, xs)
+                outs.append(yc)
+            (x, aux) = carry
+            new_caches = (jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+                          if outs and jax.tree.leaves(outs[0]) else {})
+        else:
+            (x, aux), new_caches = jax.lax.scan(
+                fn, (x, jnp.float32(0.0)), (params["layers"], caches_xs))
+        return x, new_caches, aux / self.cfg.n_layers
+
+    # ------------------------------------------------------------------ train
+    def loss_fn(self, params, batch):
+        """batch: tokens [B,S(,ncb)] int32, targets same, optional patches."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        B, S = tokens.shape[0], tokens.shape[1]
+        positions = jnp.arange(S)
+        x, _, aux = self._backbone(params, x, mode="train", positions=positions,
+                                   patches=batch.get("patches"))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        # chunked CE fused with the unembed matmul (bounds the f32 workspace)
+        chunk = 512 if S * cfg.vocab_padded > (1 << 24) else 0
+        loss = self._ce_from_hidden(params, x, batch["targets"], chunk)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.load_balance_coef * aux
+        return loss, {"ce": loss, "aux": aux}
+
+    def _ce_from_hidden(self, params, x, targets, chunk):
+        cfg = self.cfg
+        if not chunk or x.shape[1] <= chunk:
+            lg = self.logits(params, x)
+            lg = sh.shard(lg, sh.BATCH, None, sh.MODEL) if not cfg.n_codebooks \
+                else sh.shard(lg, sh.BATCH, None, None, sh.MODEL)
+            return cross_entropy_logits(lg, targets, cfg.vocab)
+        B, S = targets.shape[0], targets.shape[1]
+        n = S // chunk
+        xs = x[:, :n * chunk].reshape(B, n, chunk, -1).swapaxes(0, 1)
+        tg = targets[:, :n * chunk].reshape(
+            B, n, chunk, *targets.shape[2:]).swapaxes(0, 1)
+
+        def body(tot, xs_):
+            xc, tc = xs_
+            lg = self.logits(params, xc)
+            l = cross_entropy_logits(lg, tc, cfg.vocab)
+            return tot + l, None
+
+        tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, tg))
+        loss = tot / n
+        rem = S - n * chunk
+        if rem:
+            lg = self.logits(params, x[:, n * chunk:])
+            loss = (loss * n * chunk + cross_entropy_logits(
+                lg, targets[:, n * chunk:], cfg.vocab) * rem) / S
+        return loss
+
+    # ---------------------------------------------------------------- serving
+    def cache_len(self, s_max: int) -> int:
+        w = self.cfg.sliding_window
+        return min(w, s_max) if w else s_max
+
+    def init_decode_state(self, B: int, s_max: int, dtype=None):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.decode_state_specs(B, s_max, dtype))
+
+    def decode_state_specs(self, B: int, s_max: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or self.dtype
+        KV, hd, H = cfg.kv_heads, cfg.hd, cfg.n_heads
+        G = self.n_groups
+        S_c = self.cache_len(s_max)
+        sds = jax.ShapeDtypeStruct
+        slots = {}
+        for si, slot in enumerate(self.pattern):
+            key = f"slot{si}"
+            if slot.mixer == "attn":
+                slots[key] = {"k": sds((G, B, S_c, KV, hd), dt),
+                              "v": sds((G, B, S_c, KV, hd), dt)}
+            elif slot.mixer == "cross":
+                slots[key] = {"k": sds((G, B, cfg.n_patches, KV, hd), dt),
+                              "v": sds((G, B, cfg.n_patches, KV, hd), dt)}
+            elif slot.mixer == "mamba":
+                di = cfg.mamba.expand * cfg.d_model
+                slots[key] = {"conv": sds((G, B, cfg.mamba.d_conv - 1, di), dt),
+                              "h": sds((G, B, di, cfg.mamba.d_state), jnp.float32)}
+            elif slot.mixer == "mlstm":
+                du = int(cfg.xlstm.proj_factor * cfg.d_model)
+                hdu = du // H
+                slots[key] = {"C": sds((G, B, H, hdu, hdu), jnp.float32),
+                              "n": sds((G, B, H, hdu), jnp.float32),
+                              "m": sds((G, B, H), jnp.float32)}
+            elif slot.mixer == "slstm":
+                hds = cfg.d_model // H
+                slots[key] = {k: sds((G, B, H, hds), jnp.float32)
+                              for k in ("c", "n", "h", "m")}
+        return slots
+
+    def state_logical_specs(self, B: int, s_max: int):
+        """Logical sharding for decode state (cache S over MODEL, batch over BATCH)."""
+        def spec_for(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            slot_key = path[0].key if hasattr(path[0], "key") else str(path[0])
+            si = int(slot_key.replace("slot", ""))
+            mixer = self.pattern[si].mixer
+            if mixer == "attn" and name in ("k", "v"):
+                return (None, sh.BATCH, sh.MODEL, None, None)
+            if mixer == "cross" and name in ("k", "v"):
+                return (None, sh.BATCH, None, None, None)
+            if mixer == "mamba":
+                return {"conv": (None, sh.BATCH, None, sh.MODEL),
+                        "h": (None, sh.BATCH, sh.MODEL, None)}[name]
+            if mixer == "mlstm":
+                return {"C": (None, sh.BATCH, None, None, None),
+                        "n": (None, sh.BATCH, None, None),
+                        "m": (None, sh.BATCH, None)}[name]
+            if mixer == "slstm":
+                return (None, sh.BATCH, None, None)
+            return tuple(None for _ in leaf.shape)
+        return jax.tree_util.tree_map_with_path(
+            spec_for, self.decode_state_specs(B, s_max))
+
+    def prefill(self, params, batch, s_max: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape[0], tokens.shape[1]
+        x = self.embed(params, tokens)
+        positions = jnp.arange(S)
+        caches = self.init_decode_state(B, s_max)
+        x, new_caches, _ = self._backbone(
+            params, x, mode="prefill", positions=positions, caches=caches,
+            patches=batch.get("patches"))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        lg = self.logits(params, x[:, -1:])[:, 0]
+        return lg[..., :cfg.vocab], new_caches
+
+    def decode_step(self, params, state, token, pos, patches=None):
+        """token [B] (audio [B,ncb]); pos scalar int32; returns (logits, state)."""
+        cfg = self.cfg
+        tok = token[:, None] if not cfg.n_codebooks else token[:, None, :]
+        x = self.embed(params, tok)                 # [B,1,D]
+        positions = jnp.array([0]) + pos
+        x, new_caches, _ = self._backbone(
+            params, x, mode="decode", positions=positions, caches=state,
+            pos=pos, patches=patches)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        lg = self.logits(params, x[:, 0])
+        return lg[..., :cfg.vocab], new_caches
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: top_k of num_experts)."""
+    total = param_count(params)
+    if cfg.moe is None:
+        return total
+
+    def moe_leaves(tree):
+        n = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            keys = [getattr(k, "key", str(k)) for k in path]
+            if "moe" in keys and keys[-1] in ("w1", "w2", "w3"):
+                n += int(np.prod(leaf.shape))
+        return n
+
+    expert_total = moe_leaves(params)
+    active_frac = cfg.moe.top_k / cfg.moe.num_experts
+    return total - expert_total + int(expert_total * active_frac)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, momentum, adam, get_client_optimizer,
+)
+from repro.optim.server import (  # noqa: F401
+    ServerOptimizer, fedavg_server, fedadam_server, fedyogi_server,
+    get_server_optimizer,
+)

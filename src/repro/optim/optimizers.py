@@ -1,0 +1,75 @@
+"""Client-side optimizers (pure-JAX, optax-free).
+
+An Optimizer is a pair of pure functions:
+    init(params)              -> opt_state
+    update(grads, state, params, lr) -> (new_params, new_state)
+
+FedAvg's local solver is plain SGD (McMahan et al. 2017); momentum and Adam
+are provided for the server-side FedOpt family and for centralized baselines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype), state, grads)
+        new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return new_p, new_m
+
+    return Optimizer("momentum", init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new_p = jax.tree.map(
+            lambda p, m_, v_: p - (lr * (m_ / bc1) /
+                                   (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new_p, {"m": m, "v": v, "t": t}
+
+    return Optimizer("adam", init, update)
+
+
+def get_client_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](**kw)

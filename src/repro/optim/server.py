@@ -1,0 +1,73 @@
+"""Server-side optimizers applied to the aggregated federated delta.
+
+FedAvg:  M_{r+1} = M_r + eta * Delta            (paper Algorithm 1, line 12)
+FedAdam / FedYogi (Reddi et al. 2021): adaptive server updates — a
+beyond-paper extension (DESIGN.md notes it; the paper only uses FedAvg-style
+application of the aggregate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ServerOptimizer:
+    name: str
+    init: Callable            # params -> state
+    apply: Callable           # (params, delta, state) -> (params, state)
+
+
+def fedavg_server(lr: float = 1.0) -> ServerOptimizer:
+    def init(params):
+        return ()
+
+    def apply(params, delta, state):
+        new = jax.tree.map(lambda p, d: p + lr * d.astype(p.dtype), params, delta)
+        return new, state
+
+    return ServerOptimizer("fedavg", init, apply)
+
+
+def _adaptive(name: str, lr: float, b1: float, b2: float, tau: float):
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.full(p.shape, tau ** 2, jnp.float32), params),
+        }
+
+    def apply(params, delta, state):
+        m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+                         state["m"], delta)
+        if name == "fedadam":
+            v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(
+                d.astype(jnp.float32)), state["v"], delta)
+        else:  # fedyogi
+            def yogi(v_, d):
+                d2 = jnp.square(d.astype(jnp.float32))
+                return v_ - (1 - b2) * d2 * jnp.sign(v_ - d2)
+            v = jax.tree.map(yogi, state["v"], delta)
+        new_p = jax.tree.map(
+            lambda p, m_, v_: p + (lr * m_ / (jnp.sqrt(v_) + tau)).astype(p.dtype),
+            params, m, v)
+        return new_p, {"m": m, "v": v}
+
+    return ServerOptimizer(name, init, apply)
+
+
+def fedadam_server(lr: float = 0.01, b1: float = 0.9, b2: float = 0.99,
+                   tau: float = 1e-3) -> ServerOptimizer:
+    return _adaptive("fedadam", lr, b1, b2, tau)
+
+
+def fedyogi_server(lr: float = 0.01, b1: float = 0.9, b2: float = 0.99,
+                   tau: float = 1e-3) -> ServerOptimizer:
+    return _adaptive("fedyogi", lr, b1, b2, tau)
+
+
+def get_server_optimizer(name: str, **kw) -> ServerOptimizer:
+    return {"fedavg": fedavg_server, "fedadam": fedadam_server,
+            "fedyogi": fedyogi_server}[name](**kw)

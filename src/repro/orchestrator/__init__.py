@@ -1,0 +1,5 @@
+from repro.orchestrator.registry import ClientInfo, ResourceProfile, make_hybrid_fleet  # noqa: F401
+from repro.orchestrator.selection import AdaptiveSelection, RandomSelection, get_selection  # noqa: F401
+from repro.orchestrator.straggler import StragglerPolicy, apply_mitigation, simulate_round_times  # noqa: F401
+from repro.orchestrator.fault import FaultConfig, FaultInjector  # noqa: F401
+from repro.orchestrator.server import Orchestrator, RoundLog  # noqa: F401

@@ -1,0 +1,66 @@
+"""Client selection strategies (paper §4.1 Adaptive Client Selection)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.orchestrator.registry import ClientInfo
+
+
+class RandomSelection:
+    """Uniform sampling (the FedAvg default; the paper's ablation baseline)."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def select(self, fleet: list[ClientInfo], k: int, rnd: int) -> list[int]:
+        avail = [c.cid for c in fleet]
+        return list(self.rng.choice(avail, min(k, len(avail)), replace=False))
+
+
+class AdaptiveSelection:
+    """Scores clients by resource profile x history, with load balancing and
+    a fairness/aging term (so slow-but-unique data still participates).
+
+      score = compute^a * bandwidth^b * success_rate^c * aging
+    Load balancing: the slowest `exclude_frac` quantile (by EMA round time)
+    is temporarily excluded (paper: "underperforming or slower nodes may be
+    temporarily excluded")."""
+
+    def __init__(self, seed: int = 0, exclude_frac: float = 0.2,
+                 a: float = 0.5, b: float = 0.3, c: float = 2.0,
+                 aging_boost: float = 0.15, softmax_temp: float = 1.0):
+        self.rng = np.random.default_rng(seed)
+        self.exclude_frac = exclude_frac
+        self.a, self.b, self.c = a, b, c
+        self.aging_boost = aging_boost
+        self.temp = softmax_temp
+
+    def select(self, fleet: list[ClientInfo], k: int, rnd: int) -> list[int]:
+        cands = list(fleet)
+        # load balancing: drop the slowest quantile among profiled clients
+        timed = [c for c in cands if c.ema_round_time > 0]
+        if len(timed) > 4 and self.exclude_frac:
+            cutoff = np.quantile([c.ema_round_time for c in timed],
+                                 1.0 - self.exclude_frac)
+            slow = {c.cid for c in timed if c.ema_round_time > cutoff}
+            kept = [c for c in cands if c.cid not in slow]
+            if len(kept) >= k:
+                cands = kept
+        scores = []
+        for c in cands:
+            s = (max(c.profile.compute_tflops, 1e-3) ** self.a
+                 * max(c.profile.bandwidth_gbps, 1e-3) ** self.b
+                 * max(c.success_rate, 0.05) ** self.c)
+            age = rnd - c.last_selected_round
+            s *= 1.0 + self.aging_boost * np.log1p(max(age, 0))
+            scores.append(s)
+        scores = np.asarray(scores, np.float64)
+        p = np.exp(np.log(scores + 1e-12) / self.temp)
+        p /= p.sum()
+        pick = self.rng.choice([c.cid for c in cands], min(k, len(cands)),
+                               replace=False, p=p)
+        return list(pick)
+
+
+def get_selection(name: str, **kw):
+    return {"random": RandomSelection, "adaptive": AdaptiveSelection}[name](**kw)

@@ -1,0 +1,155 @@
+"""The Central Orchestrator (paper §3.2): the full round loop of Algorithm 1
+with adaptive selection, straggler mitigation, fault injection, comm
+accounting and checkpointing wired together.
+
+Host-side only — the heavy math is the jit'd round step from
+repro.core.round; the orchestrator decides *who participates*, charges
+simulated wall-clock/bytes, and manages state across rounds.  It is
+deliberately light/stateless-restartable: everything it needs to resume
+lives in the CheckpointManager.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.transport import CommAccountant, link_for_site
+from repro.core.compression import payload_bytes
+from repro.core.convergence import ConvergenceMonitor
+from repro.core.round import FLConfig, build_fl_round_step
+from repro.optim import get_client_optimizer, get_server_optimizer
+from repro.orchestrator.fault import FaultConfig, FaultInjector
+from repro.orchestrator.registry import ClientInfo
+from repro.orchestrator.selection import get_selection
+from repro.orchestrator.straggler import (StragglerPolicy, apply_mitigation,
+                                          simulate_round_times)
+
+
+@dataclass
+class RoundLog:
+    rnd: int
+    selected: list
+    participated: int
+    duration_s: float
+    client_loss: float
+    delta_norm: float
+    bytes_up: int
+    eval_metric: float = float("nan")
+
+
+@dataclass
+class Orchestrator:
+    fleet: list                       # list[ClientInfo]
+    fed_data: object                  # FederatedDataset
+    loss_fn: Callable                 # (params, batch) -> (loss, aux)
+    fl: FLConfig
+    client_opt_name: str = "sgd"
+    server_opt_name: str = "fedavg"
+    server_opt_kw: dict = field(default_factory=dict)
+    selection_name: str = "adaptive"
+    straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+    faults: FaultConfig = field(default_factory=FaultConfig)
+    batch_size: int = 16
+    flops_per_client_round: float = 1e12
+    eval_fn: Optional[Callable] = None     # (params) -> float metric
+    eval_every: int = 10
+    checkpoint_mgr: object = None
+    checkpoint_every: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self.jrng = jax.random.PRNGKey(self.seed)
+        self.selection = get_selection(self.selection_name, seed=self.seed)
+        self.fault_injector = FaultInjector(self.faults, seed=self.seed + 1)
+        self.comm = CommAccountant()
+        self.logs: list[RoundLog] = []
+        self.virtual_clock = 0.0
+        client_opt = get_client_optimizer(self.client_opt_name)
+        server_opt = get_server_optimizer(self.server_opt_name,
+                                          **self.server_opt_kw)
+        self._server_opt = server_opt
+        self._round_step = jax.jit(build_fl_round_step(
+            self.loss_fn, client_opt, server_opt, self.fl))
+
+    # ------------------------------------------------------------------
+    def init_server_state(self, params):
+        return self._server_opt.init(params)
+
+    def run_round(self, rnd: int, params, server_state):
+        C = self.fl.num_clients
+        selected = self.selection.select(self.fleet, C, rnd)
+        clients = [self.fleet[c] for c in selected]
+
+        # --- simulate system behaviour (host-side) ---
+        upd_bytes = self._payload_bytes_cache(params)
+        times = simulate_round_times(clients, self.flops_per_client_round,
+                                     upd_bytes, self.rng, self.straggler)
+        mask, duration = apply_mitigation(times, self.straggler)
+        self.fault_injector.step_round()
+        mask = mask * self.fault_injector.survive_mask(clients)
+
+        # --- data + weights ---
+        batches = self.fed_data.sample_round(selected, self.fl.local_steps,
+                                             self.batch_size)
+        batches = jax.tree.map(jnp.asarray, batches)
+        weights = jnp.asarray([max(self.fed_data.client_size(c), 1)
+                               for c in selected], jnp.float32)
+        jmask = jnp.asarray(mask, jnp.float32)
+
+        # --- the jit'd Algorithm-1 round ---
+        self.jrng, r = jax.random.split(self.jrng)
+        params, server_state, metrics = self._round_step(
+            params, server_state, batches, weights, jmask, r)
+
+        # --- accounting ---
+        bytes_up = 0
+        for ci, c in enumerate(clients):
+            link = link_for_site(c.site)
+            self.comm.log(rnd, c.cid, "down", upd_bytes, link)
+            if mask[ci] > 0:
+                t = self.comm.log(rnd, c.cid, "up", upd_bytes, link)
+                bytes_up += upd_bytes
+            c.record(mask[ci] > 0, float(times[ci]), rnd)
+        self.virtual_clock += duration
+
+        log = RoundLog(
+            rnd=rnd, selected=selected, participated=int(mask.sum()),
+            duration_s=duration,
+            client_loss=float(metrics["client_loss"]),
+            delta_norm=float(metrics["delta_norm"]),
+            bytes_up=bytes_up)
+        self.logs.append(log)
+        return params, server_state, log
+
+    def _payload_bytes_cache(self, params):
+        if not hasattr(self, "_pb"):
+            self._pb = payload_bytes(params, self.fl.compression)
+        return self._pb
+
+    def run(self, params, num_rounds: int, server_state=None,
+            convergence_eps: float = 0.0, verbose: bool = False):
+        if server_state is None:
+            server_state = self.init_server_state(params)
+        monitor = ConvergenceMonitor(convergence_eps) if convergence_eps else None
+        for rnd in range(num_rounds):
+            params, server_state, log = self.run_round(rnd, params, server_state)
+            if self.eval_fn and (rnd % self.eval_every == 0
+                                 or rnd == num_rounds - 1):
+                log.eval_metric = float(self.eval_fn(params))
+            if verbose:
+                print(f"round {rnd:4d} loss={log.client_loss:.4f} "
+                      f"dur={log.duration_s:.1f}s part={log.participated} "
+                      f"eval={log.eval_metric:.4f}")
+            if self.checkpoint_mgr and self.checkpoint_every and \
+                    rnd % self.checkpoint_every == 0:
+                self.checkpoint_mgr.save(rnd, params, server_state,
+                                         {"clock": self.virtual_clock})
+            if monitor and monitor.update(log.delta_norm):
+                break
+        return params, server_state

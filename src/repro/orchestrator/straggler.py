@@ -1,0 +1,50 @@
+"""Straggler model + mitigation (paper §4.2).
+
+``simulate_round_times`` produces each selected client's wall time for one
+round from its resource profile (compute + transfer + queueing noise); the
+two mitigations turn those times into a participation mask + round duration:
+
+  * deadline cutoff: clients missing the budget are skipped this round,
+  * partial (fastest-k) aggregation: stop once k updates have arrived.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.orchestrator.registry import ClientInfo
+
+
+@dataclass
+class StragglerPolicy:
+    deadline_s: float = 0.0       # 0 -> no deadline
+    fastest_k: int = 0            # 0 -> wait for all
+    contention_sigma: float = 0.25  # lognormal compute-noise (shared nodes)
+
+
+def simulate_round_times(clients: list[ClientInfo], flops_per_client: float,
+                         payload_bytes: int, rng: np.random.Generator,
+                         policy: StragglerPolicy) -> np.ndarray:
+    times = []
+    for c in clients:
+        noise = rng.lognormal(0.0, policy.contention_sigma)
+        compute = flops_per_client / (c.profile.compute_tflops * 1e12) * noise
+        transfer = (2 * payload_bytes) / (c.profile.bandwidth_gbps * 1e9 / 8)
+        times.append(compute + transfer + 2 * c.profile.latency_ms * 1e-3)
+    return np.asarray(times)
+
+
+def apply_mitigation(times: np.ndarray, policy: StragglerPolicy):
+    """Returns (mask [C] float, round_duration_s)."""
+    mask = np.ones_like(times)
+    duration = times.max() if len(times) else 0.0
+    if policy.fastest_k and policy.fastest_k < len(times):
+        kth = np.partition(times, policy.fastest_k - 1)[policy.fastest_k - 1]
+        mask = (times <= kth).astype(np.float64)
+        duration = kth
+    if policy.deadline_s:
+        dl_mask = (times <= policy.deadline_s).astype(np.float64)
+        mask = mask * dl_mask
+        duration = min(duration, policy.deadline_s)
+    return mask, float(duration)

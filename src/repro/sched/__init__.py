@@ -1,0 +1,4 @@
+from repro.sched.adapter import JobSpec, JobHandle, JobState, SchedulerAdapter  # noqa: F401
+from repro.sched.slurm import SlurmAdapter  # noqa: F401
+from repro.sched.k8s import K8sAdapter, pod_manifest  # noqa: F401
+from repro.sched.hybrid import HybridAdapter  # noqa: F401

@@ -1,0 +1,95 @@
+"""Scheduler adapter (paper §3.2): one abstraction over SLURM (HPC),
+Kubernetes (cloud) and hybrid combinations.
+
+Adapters *generate real artifacts* (sbatch scripts / pod manifests) so the
+framework is deployable, and execute them against a simulated backend with a
+virtual clock in this offline container (DESIGN.md §2 hardware adaptation).
+"""
+from __future__ import annotations
+
+import abc
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+
+
+class JobState(str, Enum):
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    COMPLETED = "COMPLETED"
+    FAILED = "FAILED"
+    PREEMPTED = "PREEMPTED"
+    CANCELLED = "CANCELLED"
+
+
+@dataclass
+class JobSpec:
+    name: str
+    command: str
+    nodes: int = 1
+    gpus_per_node: int = 0
+    cpus_per_node: int = 4
+    mem_gb: int = 16
+    time_limit_s: int = 3600
+    site: str = "hpc"              # routing hint for the hybrid adapter
+    preemptible: bool = False
+
+
+@dataclass
+class JobHandle:
+    job_id: str
+    spec: JobSpec
+    state: JobState = JobState.PENDING
+    submit_time: float = 0.0
+    start_time: float = -1.0
+    end_time: float = -1.0
+    artifact: str = ""             # generated sbatch script / manifest
+
+
+class SchedulerAdapter(abc.ABC):
+    """submit/poll/cancel + virtual-clock advance."""
+
+    def __init__(self):
+        self._ids = itertools.count(1)
+        self.jobs: dict[str, JobHandle] = {}
+        self.clock: float = 0.0
+
+    @abc.abstractmethod
+    def render_artifact(self, spec: JobSpec) -> str: ...
+
+    @abc.abstractmethod
+    def _try_start(self, handle: JobHandle) -> bool: ...
+
+    @abc.abstractmethod
+    def _runtime_s(self, spec: JobSpec) -> float: ...
+
+    def submit(self, spec: JobSpec) -> JobHandle:
+        h = JobHandle(job_id=f"{self.prefix}{next(self._ids)}", spec=spec,
+                      submit_time=self.clock,
+                      artifact=self.render_artifact(spec))
+        self.jobs[h.job_id] = h
+        return h
+
+    def poll(self, job_id: str) -> JobState:
+        return self.jobs[job_id].state
+
+    def cancel(self, job_id: str):
+        h = self.jobs[job_id]
+        if h.state in (JobState.PENDING, JobState.RUNNING):
+            h.state = JobState.CANCELLED
+            h.end_time = self.clock
+
+    def advance(self, dt: float):
+        """Advance the virtual clock; start pending jobs, finish running."""
+        self.clock += dt
+        for h in self.jobs.values():
+            if h.state == JobState.PENDING and self._try_start(h):
+                h.state = JobState.RUNNING
+                h.start_time = self.clock
+            if h.state == JobState.RUNNING:
+                if self.clock - h.start_time >= self._runtime_s(h.spec):
+                    h.state = JobState.COMPLETED
+                    h.end_time = self.clock
+
+    def running(self) -> list[JobHandle]:
+        return [h for h in self.jobs.values() if h.state == JobState.RUNNING]

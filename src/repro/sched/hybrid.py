@@ -1,0 +1,50 @@
+"""Hybrid adapter: routes jobs across SLURM (HPC) + K8s (cloud) and provides
+the elastic mixed-infrastructure coordination of paper §3.2."""
+from __future__ import annotations
+
+from repro.sched.adapter import JobHandle, JobSpec, JobState, SchedulerAdapter
+from repro.sched.k8s import K8sAdapter
+from repro.sched.slurm import SlurmAdapter
+
+
+class HybridAdapter:
+    """Not a SchedulerAdapter subclass — it owns one adapter per site and
+    presents the same submit/poll/cancel/advance surface."""
+
+    def __init__(self, slurm: SlurmAdapter | None = None,
+                 k8s: K8sAdapter | None = None,
+                 overflow_to_cloud: bool = True):
+        self.slurm = slurm or SlurmAdapter()
+        self.k8s = k8s or K8sAdapter()
+        self.overflow_to_cloud = overflow_to_cloud
+        self._route: dict[str, SchedulerAdapter] = {}
+
+    @property
+    def clock(self) -> float:
+        return max(self.slurm.clock, self.k8s.clock)
+
+    def submit(self, spec: JobSpec) -> JobHandle:
+        target = self.slurm if spec.site == "hpc" else self.k8s
+        # elastic overflow: if the HPC queue is saturated, burst to cloud
+        if (target is self.slurm and self.overflow_to_cloud
+                and self.slurm._nodes_in_use() + spec.nodes > self.slurm.total_nodes):
+            target = self.k8s
+        h = target.submit(spec)
+        self._route[h.job_id] = target
+        return h
+
+    def set_workload(self, job_id: str, seconds: float):
+        self._route[job_id].set_workload(job_id, seconds)
+
+    def poll(self, job_id: str) -> JobState:
+        return self._route[job_id].poll(job_id)
+
+    def cancel(self, job_id: str):
+        self._route[job_id].cancel(job_id)
+
+    def advance(self, dt: float):
+        self.slurm.advance(dt)
+        self.k8s.advance(dt)
+
+    def running(self):
+        return self.slurm.running() + self.k8s.running()

@@ -1,0 +1,60 @@
+"""SLURM adapter: renders real sbatch scripts; simulates a partition with a
+fixed node pool and FIFO + backfill-ish start policy."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sched.adapter import JobHandle, JobSpec, JobState, SchedulerAdapter
+
+SBATCH_TEMPLATE = """#!/bin/bash
+#SBATCH --job-name={name}
+#SBATCH --nodes={nodes}
+#SBATCH --ntasks-per-node=1
+#SBATCH --cpus-per-task={cpus}
+#SBATCH --mem={mem}G
+{gpu_line}#SBATCH --time={time_min}
+#SBATCH --output=logs/%x-%j.out
+
+srun {command}
+"""
+
+
+class SlurmAdapter(SchedulerAdapter):
+    prefix = "slurm-"
+
+    def __init__(self, total_nodes: int = 30, speed_tflops: float = 16.0,
+                 queue_noise: float = 0.0, seed: int = 0):
+        super().__init__()
+        self.total_nodes = total_nodes
+        self.speed_tflops = speed_tflops
+        self.queue_noise = queue_noise
+        self.rng = np.random.default_rng(seed)
+        self._work: dict[str, float] = {}     # job_id -> seconds of work
+
+    def render_artifact(self, spec: JobSpec) -> str:
+        gpu_line = (f"#SBATCH --gres=gpu:{spec.gpus_per_node}\n"
+                    if spec.gpus_per_node else "")
+        return SBATCH_TEMPLATE.format(
+            name=spec.name, nodes=spec.nodes, cpus=spec.cpus_per_node,
+            mem=spec.mem_gb, gpu_line=gpu_line,
+            time_min=max(1, spec.time_limit_s // 60), command=spec.command)
+
+    def set_workload(self, job_id: str, seconds: float):
+        self._work[job_id] = seconds
+
+    def _nodes_in_use(self) -> int:
+        return sum(h.spec.nodes for h in self.running())
+
+    def _try_start(self, handle: JobHandle) -> bool:
+        return self._nodes_in_use() + handle.spec.nodes <= self.total_nodes
+
+    def _runtime_s(self, spec: JobSpec) -> float:
+        base = self._work.get(self._find_id(spec), 60.0)
+        noise = self.rng.lognormal(0, self.queue_noise) if self.queue_noise else 1.0
+        return min(base * noise, spec.time_limit_s)
+
+    def _find_id(self, spec: JobSpec) -> str:
+        for jid, h in self.jobs.items():
+            if h.spec is spec:
+                return jid
+        return ""

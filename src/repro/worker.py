@@ -1,0 +1,87 @@
+"""Federated client worker — the process a scheduler job actually launches
+(`python -m repro.worker`, as rendered into the sbatch scripts / pod
+manifests by the scheduler adapters).
+
+File-based transport: the orchestrator drops `global_round_NNN.bin` into
+--workdir, the worker trains locally on its private shard and writes
+`update_NNN_client_CC.bin` back.  This is the deployment-shaped
+counterpart of the in-process round step; `--once` runs a single round and
+exits (spot-instance friendly)."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core import FLConfig
+from repro.core.round import build_local_train
+from repro.data import FederatedDataset, cifar10_like, partition_by_class
+from repro.models.cnn import CIFAR_CNN, CNN
+from repro.optim import get_client_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--client-id", type=int, required=True)
+    ap.add_argument("--workdir", default="artifacts/worker")
+    ap.add_argument("--n-clients", type=int, default=20)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=0.08)
+    ap.add_argument("--mu", type=float, default=0.0)
+    ap.add_argument("--once", action="store_true")
+    ap.add_argument("--poll-s", type=float, default=1.0)
+    ap.add_argument("--timeout-s", type=float, default=30.0)
+    args = ap.parse_args()
+
+    wd = Path(args.workdir)
+    wd.mkdir(parents=True, exist_ok=True)
+
+    # this client's private shard (never leaves the process)
+    ds = cifar10_like(n=4000)
+    parts = partition_by_class(ds.y, args.n_clients, 2)
+    fed = FederatedDataset(ds, parts)
+    model = CNN(CIFAR_CNN)
+    params_like = model.init(jax.random.PRNGKey(0))
+
+    fl = FLConfig(num_clients=1, local_steps=args.local_steps,
+                  client_lr=args.lr, fedprox_mu=args.mu)
+    local_train = jax.jit(build_local_train(
+        model.loss_fn, get_client_optimizer("sgd"), fl))
+
+    done = set()
+    deadline = time.time() + args.timeout_s
+    while time.time() < deadline:
+        rounds = sorted(wd.glob("global_round_*.bin"))
+        todo = [p for p in rounds if p.name not in done]
+        if not todo:
+            time.sleep(args.poll_s)
+            continue
+        gpath = todo[-1]
+        rnd = int(gpath.stem.split("_")[-1])
+        params = load_pytree(gpath, params_like)
+        batch = fed.sample_round([args.client_id], args.local_steps,
+                                 args.batch_size)
+        batch = jax.tree.map(lambda x: jnp.asarray(x[0]), batch)
+        delta, loss = local_train(params, batch,
+                                  jax.random.PRNGKey(rnd * 1000 + args.client_id))
+        out = wd / f"update_{rnd:04d}_client_{args.client_id:03d}.bin"
+        save_pytree(out, jax.tree.map(np.asarray, delta))
+        (wd / f"update_{rnd:04d}_client_{args.client_id:03d}.json").write_text(
+            json.dumps({"loss": float(loss),
+                        "data_size": fed.client_size(args.client_id)}))
+        print(f"worker {args.client_id}: round {rnd} loss {float(loss):.4f} "
+              f"-> {out.name}")
+        done.add(gpath.name)
+        if args.once:
+            break
+
+
+if __name__ == "__main__":
+    main()

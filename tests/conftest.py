@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py (executed as
+# a subprocess) uses the 512-placeholder-device XLA flag.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(64,), (8, 32), (3, 1000), (2, 7, 129), (4096,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(shape, dtype, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape), dtype)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_matches_ref(self, shape, dtype, bits):
+        x = rand(shape, dtype, seed=hash((shape, bits)) % 2**31)
+        got = np.asarray(ops.quantize_dequant(x, bits=bits, block=128), np.float32)
+        want = np.asarray(ref.quantize_dequant_ref(x, bits=bits, block=128),
+                          np.float32)
+        # contract: equal up to (a) 1-ulp float noise from different fusion
+        # of y*scale, and (b) rare round-to-nearest .5 boundary flips, which
+        # are bounded by one quantization step.
+        step = np.abs(np.asarray(x, np.float32)).max() / (2 ** (bits - 1) - 1)
+        close = np.abs(got - want) <= 1e-5 * np.abs(want) + 1e-6
+        boundary = np.abs(got - want) <= step * 1.001
+        assert (close | boundary).all()
+        assert close.mean() >= 0.99   # boundary flips must stay rare
+
+    def test_error_bound(self):
+        x = rand((4096,), jnp.float32)
+        y = ops.quantize_dequant(x, bits=8, block=256)
+        # per-block max error <= scale/2 = max|x| / qmax / 2
+        xb = np.asarray(x).reshape(-1, 256)
+        yb = np.asarray(y).reshape(-1, 256)
+        bound = np.abs(xb).max(-1, keepdims=True) / 127 * 0.5 + 1e-7
+        assert (np.abs(xb - yb) <= bound).all()
+
+    def test_zero_block(self):
+        x = jnp.zeros((512,), jnp.float32)
+        np.testing.assert_array_equal(ops.quantize_dequant(x, bits=8), x)
+
+
+class TestTopK:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("k", [1, 8, 64])
+    def test_matches_ref(self, shape, k):
+        x = rand(shape, jnp.float32, seed=hash((shape, k)) % 2**31)
+        got = ops.topk_sparsify(x, k=k, block=128)
+        want = ref.topk_sparsify_ref(x, k=k, block=128)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_keeps_k_per_block(self):
+        x = rand((2048,), jnp.float32, seed=7)
+        y = np.asarray(ops.topk_sparsify(x, k=16, block=256)).reshape(-1, 256)
+        assert ((y != 0).sum(-1) == 16).all()
+
+    def test_kept_values_unchanged(self):
+        x = rand((512,), jnp.float32, seed=9)
+        y = np.asarray(ops.topk_sparsify(x, k=32, block=256))
+        nz = y != 0
+        np.testing.assert_array_equal(y[nz], np.asarray(x)[nz])
+
+
+class TestFedProx:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("mu", [0.0, 0.01, 1.0])
+    def test_matches_ref(self, shape, dtype, mu):
+        w = rand(shape, dtype, 1)
+        g = rand(shape, dtype, 2)
+        w0 = rand(shape, dtype, 3)
+        got = ops.fedprox_update(w, g, w0, lr=0.1, mu=mu)
+        want = ref.fedprox_update_ref(w, g, w0, 0.1, mu)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_mu_zero_is_sgd(self):
+        w, g = rand((100,), jnp.float32, 1), rand((100,), jnp.float32, 2)
+        got = ops.fedprox_update(w, g, jnp.zeros_like(w), lr=0.5, mu=0.0)
+        np.testing.assert_allclose(got, w - 0.5 * g, rtol=1e-6)
+
+
+class TestSelectiveScan:
+    @pytest.mark.parametrize("B,L,D,N", [(1, 8, 128, 4), (2, 16, 256, 8),
+                                         (3, 32, 384, 16)])
+    def test_matches_ref(self, B, L, D, N):
+        rng = np.random.default_rng(L * D)
+        a = jnp.asarray(rng.uniform(0.3, 1.0, (B, L, D, N)), jnp.float32)
+        b = jnp.asarray(rng.normal(0, 0.1, (B, L, D, N)), jnp.float32)
+        h0 = jnp.asarray(rng.normal(0, 1, (B, D, N)), jnp.float32)
+        hs, hl = ops.selective_scan_chunk(a, b, h0)
+        hs_r, hl_r = ref.selective_scan_chunk_ref(a, b, h0)
+        np.testing.assert_allclose(hs, hs_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(hl, hl_r, rtol=1e-5, atol=1e-5)
+
+    def test_vjp_matches_ref(self):
+        rng = np.random.default_rng(0)
+        B, L, D, N = 2, 12, 128, 4
+        a = jnp.asarray(rng.uniform(0.5, 1.0, (B, L, D, N)), jnp.float32)
+        b = jnp.asarray(rng.normal(0, 0.1, (B, L, D, N)), jnp.float32)
+        h0 = jnp.asarray(rng.normal(0, 1, (B, D, N)), jnp.float32)
+
+        def loss(fn):
+            return lambda a, b, h0: (
+                (fn(a, b, h0)[0] * jnp.arange(L)[None, :, None, None]).sum()
+                + fn(a, b, h0)[1].sum())
+
+        g1 = jax.grad(loss(ops.selective_scan_chunk), argnums=(0, 1, 2))(a, b, h0)
+        g2 = jax.grad(loss(ref.selective_scan_chunk_ref), argnums=(0, 1, 2))(a, b, h0)
+        for x1, x2 in zip(g1, g2):
+            np.testing.assert_allclose(x1, x2, rtol=1e-4, atol=1e-5)
+
+    def test_sequential_semantics(self):
+        # tiny hand-rolled loop equals the kernel
+        B, L, D, N = 1, 5, 128, 2
+        rng = np.random.default_rng(5)
+        a = rng.uniform(0.2, 0.9, (B, L, D, N)).astype(np.float32)
+        b = rng.normal(0, 1, (B, L, D, N)).astype(np.float32)
+        h0 = rng.normal(0, 1, (B, D, N)).astype(np.float32)
+        hs, hl = ops.selective_scan_chunk(jnp.asarray(a), jnp.asarray(b),
+                                          jnp.asarray(h0))
+        h = h0.copy()
+        for t in range(L):
+            h = a[:, t] * h + b[:, t]
+            np.testing.assert_allclose(hs[:, t], h, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(hl, h, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,90 @@
+"""Orchestrator subsystem units: selection, straggler mitigation, faults."""
+import numpy as np
+
+from repro.orchestrator import (AdaptiveSelection, FaultConfig, FaultInjector,
+                                RandomSelection, StragglerPolicy,
+                                apply_mitigation, make_hybrid_fleet,
+                                simulate_round_times)
+
+
+def test_fleet_shape_matches_paper_testbed():
+    fleet = make_hybrid_fleet(30, 30)
+    assert len(fleet) == 60
+    assert sum(c.site == "hpc" for c in fleet) == 30
+    assert any(c.profile.spot for c in fleet if c.site == "cloud")
+    # HPC links are orders of magnitude faster than cloud
+    hpc_bw = np.mean([c.profile.bandwidth_gbps for c in fleet if c.site == "hpc"])
+    cloud_bw = np.mean([c.profile.bandwidth_gbps for c in fleet if c.site == "cloud"])
+    assert hpc_bw > 5 * cloud_bw
+
+
+def test_random_selection_unique():
+    fleet = make_hybrid_fleet(5, 5)
+    sel = RandomSelection(0).select(fleet, 6, 0)
+    assert len(sel) == len(set(sel)) == 6
+
+
+def test_adaptive_prefers_fast_reliable():
+    fleet = make_hybrid_fleet(10, 10, seed=3)
+    sel = AdaptiveSelection(seed=0, softmax_temp=0.3)
+    counts = np.zeros(len(fleet))
+    for rnd in range(200):
+        for c in sel.select(fleet, 5, rnd):
+            counts[c] += 1
+    fast = [c.cid for c in fleet
+            if c.profile.compute_tflops > 5 and c.profile.bandwidth_gbps > 5]
+    slow = [c.cid for c in fleet if c.profile.compute_tflops < 1.5]
+    assert counts[fast].mean() > counts[slow].mean()
+
+
+def test_adaptive_load_balancing_excludes_slow_history():
+    fleet = make_hybrid_fleet(10, 10, seed=1)
+    # give one client terrible history
+    for c in fleet:
+        c.record(True, 1.0, 0)
+    fleet[3].ema_round_time = 1000.0
+    sel = AdaptiveSelection(seed=0, exclude_frac=0.2)
+    picks = [sel.select(fleet, 8, r) for r in range(50)]
+    freq3 = sum(3 in p for p in picks)
+    assert freq3 == 0
+
+
+def test_straggler_deadline_and_fastest_k():
+    times = np.array([1.0, 2.0, 3.0, 10.0])
+    mask, dur = apply_mitigation(times, StragglerPolicy(deadline_s=5.0))
+    assert mask.tolist() == [1, 1, 1, 0]
+    assert dur == 5.0
+    mask, dur = apply_mitigation(times, StragglerPolicy(fastest_k=2))
+    assert mask.tolist() == [1, 1, 0, 0]
+    assert dur == 2.0
+    mask, dur = apply_mitigation(times, StragglerPolicy())
+    assert mask.sum() == 4 and dur == 10.0
+
+
+def test_simulated_times_reflect_profiles():
+    fleet = make_hybrid_fleet(2, 2, seed=0)
+    rng = np.random.default_rng(0)
+    pol = StragglerPolicy(contention_sigma=0.0)
+    t = simulate_round_times(fleet, 1e13, 50_000_000, rng, pol)
+    # gpu hpc nodes (idx 0) much faster than cpu cloud (idx 3)
+    assert t[0] < t[3]
+
+
+def test_fault_injector_dropout_rate():
+    fleet = make_hybrid_fleet(20, 20, seed=0)
+    inj = FaultInjector(FaultConfig(dropout_prob=0.2), seed=0)
+    drops = []
+    for _ in range(100):
+        inj.step_round()
+        m = inj.survive_mask(fleet)
+        drops.append(1 - m.mean())
+    assert 0.15 < np.mean(drops) < 0.35   # 0.2 dropout + reliability effects
+
+
+def test_network_partition_hits_whole_site():
+    fleet = make_hybrid_fleet(5, 5, seed=0)
+    inj = FaultInjector(FaultConfig(partition_prob=1.0, partition_len=1), seed=2)
+    inj.step_round()
+    m = inj.survive_mask(fleet)
+    sites = {c.site for c, alive in zip(fleet, m) if alive == 0}
+    assert len(sites) == 1               # exactly one site partitioned

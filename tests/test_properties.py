@@ -1,0 +1,145 @@
+"""Hypothesis property-based tests on system invariants: aggregation,
+compression, and non-IID partitioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import aggregation as agg
+from repro.core.compression import (CompressionConfig, payload_bytes,
+                                    quantize_dequant, topk_sparsify)
+from repro.data.partition import (partition_by_class, partition_dirichlet,
+                                  partition_quantity_skew)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+# ---------------------------------------------------------------- aggregation
+@given(hnp.arrays(np.float32, st.tuples(st.integers(2, 6), st.integers(1, 16)),
+                  elements=floats))
+def test_weighted_mean_of_identical_is_identity(d):
+    d = np.repeat(d[:1], d.shape[0], axis=0)          # all clients identical
+    out = agg.weighted_mean({"x": jnp.asarray(d)},
+                            jnp.ones(d.shape[0]))["x"]
+    np.testing.assert_allclose(out, d[0], rtol=1e-5, atol=1e-5)
+
+
+@given(hnp.arrays(np.float32, st.tuples(st.integers(2, 6), st.integers(1, 16)),
+                  elements=floats))
+def test_weighted_mean_within_convex_hull(d):
+    w = jnp.ones(d.shape[0])
+    out = np.asarray(agg.weighted_mean({"x": jnp.asarray(d)}, w)["x"])
+    assert (out <= d.max(0) + 1e-4).all()
+    assert (out >= d.min(0) - 1e-4).all()
+
+
+@given(hnp.arrays(np.float32, st.tuples(st.integers(3, 6), st.integers(1, 8)),
+                  elements=floats),
+       st.integers(0, 5))
+def test_masked_client_never_contributes(d, drop):
+    C = d.shape[0]
+    drop = drop % C
+    mask = np.ones(C, np.float32)
+    mask[drop] = 0
+    w = agg.effective_weights(jnp.ones(C), jnp.asarray(mask))
+    out1 = np.asarray(agg.weighted_mean({"x": jnp.asarray(d)}, w)["x"])
+    d2 = d.copy()
+    d2[drop] = 1e6                                     # poison the masked client
+    out2 = np.asarray(agg.weighted_mean({"x": jnp.asarray(d2)}, w)["x"])
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_effective_weights_loss_mode_prefers_low_loss():
+    w = agg.effective_weights(jnp.ones(2), jnp.ones(2),
+                              jnp.asarray([0.1, 10.0]), "weighted")
+    assert float(w[0]) > float(w[1])
+
+
+# ---------------------------------------------------------------- compression
+@given(hnp.arrays(np.float32, st.integers(1, 600), elements=floats))
+def test_quantize_error_bounded_by_half_step(x):
+    x = jnp.asarray(x)
+    y = quantize_dequant(x, bits=8, block=128, stochastic=False)
+    xb = np.asarray(x)
+    # global bound: per-block scale <= global max / 127
+    step = np.abs(xb).max() / 127 if xb.size else 0
+    assert (np.abs(np.asarray(y) - xb) <= step * 0.500001 + 1e-6).all()
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 600), elements=floats),
+       st.integers(1, 64))
+def test_topk_is_subset_with_unchanged_values(x, k):
+    x = jnp.asarray(x)
+    y = np.asarray(topk_sparsify(x, k / 128, block=128))
+    xv = np.asarray(x)
+    nz = y != 0
+    np.testing.assert_array_equal(y[nz], xv[nz])
+    # zeros only where magnitude below the per-block max
+    assert (np.abs(y) <= np.abs(xv) + 1e-9).all()
+
+
+@given(st.integers(1, 2000), st.sampled_from([4, 8]),
+       st.floats(0.01, 0.9))
+def test_payload_bytes_monotone(n, bits, frac):
+    tree = {"w": np.zeros(n, np.float32)}
+    full = payload_bytes(tree, None)
+    q = payload_bytes(tree, CompressionConfig(quantize_bits=bits))
+    assert full == n * 4
+    assert q < full + 132  # quant never bigger (mod per-block scale overhead)
+    both = payload_bytes(tree, CompressionConfig(quantize_bits=bits,
+                                                 topk_frac=frac))
+    lighter = payload_bytes(tree, CompressionConfig(quantize_bits=bits,
+                                                    topk_frac=frac / 2 + 1e-3))
+    assert lighter <= both + 1
+
+
+def test_paper_table4_compression_ratio():
+    """Paper Table 4: 43-45 MB -> 13-16 MB (~65% reduction) with
+    quantization+sparsification.  Our defaults should land in that band."""
+    tree = {"w": np.zeros(11_250_000, np.float32)}     # ~45 MB fp32 model
+    full = payload_bytes(tree, None)
+    comp = payload_bytes(tree, CompressionConfig(quantize_bits=8,
+                                                 topk_frac=0.1))
+    ratio = comp / full
+    assert 0.1 < ratio < 0.45, ratio
+
+
+# ---------------------------------------------------------------- partitioning
+@given(st.integers(40, 400), st.integers(2, 10))
+def test_partition_by_class_covers_all(n, c):
+    y = np.random.default_rng(0).integers(0, 10, n)
+    parts = partition_by_class(y, c, 2)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n                # disjoint cover
+
+
+@given(st.integers(100, 500), st.integers(2, 8),
+       st.floats(0.05, 5.0))
+def test_dirichlet_partition_covers_all(n, c, alpha):
+    y = np.random.default_rng(1).integers(0, 10, n)
+    parts = partition_dirichlet(y, c, alpha, min_size=1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+def test_pathological_partition_is_skewed():
+    y = np.random.default_rng(2).integers(0, 10, 2000)
+    parts = partition_by_class(y, 10, 2)
+    n_classes = [len(np.unique(y[p])) for p in parts]
+    # 2 shards per client; a shard can straddle one class boundary, so 2-4
+    # classes max, and on average the paper's 2-3.
+    assert max(n_classes) <= 4
+    assert np.mean(n_classes) <= 3.0
+
+
+@given(st.integers(50, 500), st.integers(2, 8))
+def test_quantity_skew_covers_all(n, c):
+    parts = partition_quantity_skew(n, c)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx) == n

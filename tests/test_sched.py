@@ -1,0 +1,78 @@
+"""Scheduler adapter units: artifact rendering + simulated lifecycles."""
+import json
+
+from repro.sched import (HybridAdapter, JobSpec, JobState, K8sAdapter,
+                         SlurmAdapter, pod_manifest)
+
+
+def mkspec(name="fl-client-0", site="hpc", **kw):
+    return JobSpec(name=name, command="python -m repro.launch.train",
+                   site=site, **kw)
+
+
+def test_sbatch_artifact_contents():
+    s = SlurmAdapter()
+    h = s.submit(mkspec(gpus_per_node=2, nodes=3, mem_gb=64))
+    art = h.artifact
+    assert "#SBATCH --nodes=3" in art
+    assert "#SBATCH --gres=gpu:2" in art
+    assert "#SBATCH --mem=64G" in art
+    assert "srun python -m repro.launch.train" in art
+
+
+def test_slurm_capacity_queueing():
+    s = SlurmAdapter(total_nodes=2)
+    h1 = s.submit(mkspec("a", nodes=2))
+    h2 = s.submit(mkspec("b", nodes=1))
+    s.set_workload(h1.job_id, 100)
+    s.set_workload(h2.job_id, 10)
+    s.advance(1)
+    assert s.poll(h1.job_id) == JobState.RUNNING
+    assert s.poll(h2.job_id) == JobState.PENDING      # no room
+    s.advance(100)
+    assert s.poll(h1.job_id) == JobState.COMPLETED
+    s.advance(1)
+    assert s.poll(h2.job_id) == JobState.RUNNING
+
+
+def test_pod_manifest_valid():
+    spec = mkspec(site="cloud", gpus_per_node=1, preemptible=True)
+    man = pod_manifest(spec)
+    assert man["kind"] == "Pod"
+    res = man["spec"]["containers"][0]["resources"]["limits"]
+    assert res["nvidia.com/gpu"] == "1"
+    assert "tolerations" in man["spec"]
+    json.dumps(man)                                    # serialisable
+
+
+def test_k8s_autoscaling():
+    k = K8sAdapter(initial_nodes=1, max_nodes=4, scale_step=1)
+    hs = [k.submit(mkspec(f"p{i}", site="cloud")) for i in range(4)]
+    for h in hs:
+        k.set_workload(h.job_id, 1000)
+    k.advance(1)
+    k.advance(1)
+    running = sum(k.poll(h.job_id) == JobState.RUNNING for h in hs)
+    assert running >= 2                                # scaled beyond 1
+    assert k.nodes > 1
+
+
+def test_k8s_spot_preemption():
+    k = K8sAdapter(initial_nodes=10, preempt_prob_per_min=60.0, seed=0)
+    h = k.submit(mkspec("spot", site="cloud", preemptible=True))
+    k.set_workload(h.job_id, 1e6)
+    for _ in range(20):
+        k.advance(10)
+    assert k.poll(h.job_id) == JobState.PREEMPTED
+
+
+def test_hybrid_routing_and_overflow():
+    hy = HybridAdapter(slurm=SlurmAdapter(total_nodes=1), k8s=K8sAdapter())
+    h_hpc = hy.submit(mkspec("a", site="hpc"))
+    assert h_hpc.job_id.startswith("slurm-")
+    h_cloud = hy.submit(mkspec("b", site="cloud"))
+    assert h_cloud.job_id.startswith("pod-")
+    # saturate slurm -> overflow to cloud
+    hy.advance(0.1)
+    h_burst = hy.submit(mkspec("c", site="hpc"))
+    assert h_burst.job_id.startswith("pod-")

@@ -1,0 +1,71 @@
+"""Secure aggregation properties: mask cancellation, privacy of individual
+updates, dropout unwinding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.secure_agg import (aggregate_masked, mask_update,
+                                   pairwise_seeds, secure_weighted_mean)
+
+
+def updates(C=4, shape=(8, 16), seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(C,) + shape).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(C, shape[1])).astype(np.float32))}
+
+
+def test_masks_cancel_exactly():
+    C = 4
+    ups = updates(C)
+    seeds = pairwise_seeds(7, C)
+    part = jnp.ones((C,))
+    masked = [mask_update(jax.tree.map(lambda x: x[i], ups), i, seeds, part)
+              for i in range(C)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masked)
+    got = aggregate_masked(stacked, part)
+    want = jax.tree.map(lambda x: x.sum(0), ups)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+def test_individual_updates_are_hidden():
+    C = 4
+    ups = updates(C)
+    seeds = pairwise_seeds(11, C)
+    part = jnp.ones((C,))
+    masked0 = mask_update(jax.tree.map(lambda x: x[0], ups), 0, seeds, part)
+    # the masked update must differ substantially from the raw one
+    raw0 = jax.tree.map(lambda x: x[0], ups)
+    for m, r in zip(jax.tree.leaves(masked0), jax.tree.leaves(raw0)):
+        assert float(jnp.abs(m - r).mean()) > 0.5   # masks are O(sqrt(C)) noise
+
+
+def test_dropout_unwinding():
+    """Masks between pairs where one side dropped must not corrupt the sum."""
+    C = 5
+    ups = updates(C, seed=3)
+    seeds = pairwise_seeds(13, C)
+    part = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0])
+    masked = [mask_update(jax.tree.map(lambda x: x[i], ups), i, seeds, part)
+              for i in range(C)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masked)
+    got = aggregate_masked(stacked, part)
+    want = jax.tree.map(
+        lambda x: (x * part.reshape((-1,) + (1,) * (x.ndim - 1))).sum(0), ups)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+def test_secure_weighted_mean_matches_plain():
+    C = 4
+    ups = updates(C, seed=5)
+    seeds = pairwise_seeds(17, C)
+    part = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    weights = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    got = secure_weighted_mean(ups, weights, part, seeds)
+    denom = float((weights * part).sum())
+    want = jax.tree.map(
+        lambda x: (x * (weights * part).reshape((-1,) + (1,) * (x.ndim - 1))
+                   ).sum(0) / denom, ups)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,112 @@
+"""End-to-end system behaviour: the full orchestrated FL loop (Algorithm 1 +
+§4 optimizations) trains real models on non-IID synthetic data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import CompressionConfig, FLConfig
+from repro.data import (FederatedDataset, cifar10_like, partition_by_class,
+                        partition_by_group, shakespeare_like)
+from repro.models import build_model
+from repro.models.cnn import CNN, CNNConfig
+from repro.configs import get_config
+from repro.orchestrator import (FaultConfig, Orchestrator, StragglerPolicy,
+                                make_hybrid_fleet)
+
+TINY_CNN = CNNConfig("tiny-cnn", (32, 32, 3), 10, channels=(8, 16), dense=64)
+
+
+def make_orch(fl=None, straggler=None, faults=None, seed=0, n=1200,
+              clients=8, sel="adaptive"):
+    # lower noise than the benchmark default: these are fast smoke-scale
+    # runs (10-14 rounds, tiny CNN) that must visibly learn
+    ds = cifar10_like(n=n, seed=seed, noise=0.6)
+    parts = partition_by_class(ds.y, clients, 2, seed=seed)
+    fed = FederatedDataset(ds, parts)
+    model = CNN(TINY_CNN)
+    params = model.init(jax.random.PRNGKey(seed))
+    fleet = make_hybrid_fleet(clients // 2, clients // 2,
+                              data_sizes=[len(p) for p in parts])
+    eval_batch = jax.tree.map(jnp.asarray, fed.eval_batch(384))
+    acc_fn = jax.jit(model.accuracy)
+    orch = Orchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn,
+        fl=fl or FLConfig(num_clients=4, local_steps=3, client_lr=0.08),
+        selection_name=sel,
+        straggler=straggler or StragglerPolicy(),
+        faults=faults or FaultConfig(),
+        batch_size=16, flops_per_client_round=5e11,
+        eval_fn=lambda p: acc_fn(p, eval_batch), eval_every=100)
+    return orch, params, model
+
+
+class TestEndToEnd:
+    def test_fl_training_improves_accuracy(self):
+        orch, params, _ = make_orch()
+        params, _ = orch.run(params, 10)
+        accs = [l.eval_metric for l in orch.logs if np.isfinite(l.eval_metric)]
+        assert accs[0] < 0.3            # starts at chance-ish
+        assert accs[-1] > 0.55, accs    # learns under pathological non-IID
+
+    def test_dropout_resilience(self):
+        """Paper §5.4: 20% dropout -> training still converges (the
+        quantitative <1.8%-gap claim is reproduced in benchmarks/).  At
+        smoke scale, eval accuracy oscillates under non-IID + dropout, so
+        the convergence signal asserted here is the training loss."""
+        orch, params, _ = make_orch(
+            faults=FaultConfig(dropout_prob=0.2), seed=1)
+        params, _ = orch.run(params, 14)
+        losses = [l.client_loss for l in orch.logs]
+        assert np.mean(losses[-3:]) < losses[0] - 0.5, losses
+        assert any(l.participated < 4 for l in orch.logs)  # drops happened
+
+    def test_compression_does_not_break_convergence(self):
+        fl = FLConfig(num_clients=4, local_steps=3, client_lr=0.08,
+                      compression=CompressionConfig(quantize_bits=8,
+                                                    topk_frac=0.25))
+        orch, params, _ = make_orch(fl=fl, seed=2)
+        params, _ = orch.run(params, 10)
+        accs = [l.eval_metric for l in orch.logs if np.isfinite(l.eval_metric)]
+        assert accs[-1] > 0.5, accs
+
+    def test_fastest_k_reduces_round_duration(self):
+        orch1, params, _ = make_orch(seed=3)
+        orch1.run(params, 6)
+        orch2, params2, _ = make_orch(
+            straggler=StragglerPolicy(fastest_k=2), seed=3)
+        orch2.run(params2, 6)
+        d1 = np.mean([l.duration_s for l in orch1.logs])
+        d2 = np.mean([l.duration_s for l in orch2.logs])
+        assert d2 < d1
+
+    def test_checkpoint_resume(self, tmp_path):
+        orch, params, _ = make_orch(seed=4)
+        orch.checkpoint_mgr = CheckpointManager(tmp_path)
+        orch.checkpoint_every = 2
+        params, sstate = orch.run(params, 5)
+        p2, s2, meta = orch.checkpoint_mgr.restore(params)
+        assert meta["round"] == 4
+        # resumed params load bit-exact into the round step
+        orch.run_round(meta["round"] + 1, jax.tree.map(jnp.asarray, p2),
+                       sstate if s2 is None else s2)
+
+
+class TestCharLM:
+    def test_federated_charlm_loss_decreases(self):
+        ds = shakespeare_like(n_seqs=600, seq_len=32, n_speakers=12)
+        parts = partition_by_group(ds.y, 6)
+        fed = FederatedDataset(ds, parts)
+        cfg = get_config("paper-charlm").replace(n_layers=2, d_model=128,
+                                                 d_ff=256)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        fleet = make_hybrid_fleet(3, 3, data_sizes=[len(p) for p in parts])
+        orch = Orchestrator(
+            fleet=fleet, fed_data=fed, loss_fn=m.loss_fn,
+            fl=FLConfig(num_clients=3, local_steps=2, client_lr=0.3),
+            batch_size=8, flops_per_client_round=1e11)
+        params, _ = orch.run(params, 8)
+        losses = [l.client_loss for l in orch.logs]
+        assert losses[-1] < losses[0] - 0.3, losses
