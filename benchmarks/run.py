@@ -13,8 +13,8 @@ import time
 import traceback
 from pathlib import Path
 
-BENCHES = ["kernel_bench", "table2", "table3", "table4", "ablations",
-           "roofline"]
+BENCHES = ["kernel_bench", "table2", "table3", "table4", "table_async",
+           "ablations", "roofline"]
 
 
 def main():
@@ -27,12 +27,14 @@ def main():
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
     from benchmarks import (ablations, kernel_bench, table2_accuracy,
-                            table3_scalability, table4_communication)
+                            table3_scalability, table4_communication,
+                            table_async)
     jobs = {
         "kernel_bench": kernel_bench.main,
         "table2": table2_accuracy.main,
         "table3": table3_scalability.main,
         "table4": table4_communication.main,
+        "table_async": table_async.main,
         "ablations": ablations.main,
     }
     if Path("artifacts/dryrun").exists() and any(

@@ -1,0 +1,153 @@
+"""Staleness-aware asynchronous (FedBuff-style) server aggregation.
+
+DESIGN
+------
+The synchronous round step (repro.core.round) stacks C client batches,
+trains every client against the SAME global params, and applies one
+aggregate per round — a barrier: the round is as slow as its slowest
+participant.  This module is the other half of the paper's heterogeneity
+story: clients train against whatever params snapshot they were handed,
+their deltas land in a bounded server buffer whenever they finish, and the
+server commits an aggregate every K arrivals (or T seconds of quiet).  An
+update that was computed ``s`` commits ago is *stale* — it is discounted,
+not discarded, with the polynomial weight of FedBuff/FedAsync:
+
+    w_eff[i] = effective_weights(weights, mask)[i] * 1 / (1 + s_i)^a
+
+The committed delta is normalised by the UN-discounted weight mass
+(``sum w_eff * d / sum w_raw``), so the discount shrinks the absolute
+server step: a buffer in which every update is equally stale takes a
+``1/(1+s)^a``-scaled step rather than a full one (the discount must not
+cancel in the mean's denominator).
+
+Split of responsibilities (mirrors round.py):
+  * ``build_client_update_step``  — the jit'd per-client local-training
+    step: ``(params_snapshot, batches[H, b, ...], rng) -> (delta, loss)``.
+    Reuses ``build_local_train`` so FedProx / fused-kernel / sharding
+    behaviour is identical to the sync path.
+  * ``build_buffer_commit_step``  — the jit'd server step over a FIXED-K
+    buffer: ``(params, server_state, deltas[K, ...], weights[K],
+    staleness[K], mask[K], rng) -> (params', state', metrics)``.
+    Timeout commits with fewer than K live updates pad with zero deltas
+    and mask 0, so one compiled step serves every commit.  Compression is
+    the same straight-through ``compress_tree`` pipeline as the sync
+    round, applied per buffered update (what crosses the wire is the
+    compressed delta).
+  * Event ordering, buffer policy, staleness bookkeeping and comm
+    accounting are HOST-side — repro.orchestrator.async_server.
+
+Equivalence invariant (tested): with staleness forced to zero, a full
+mask, and compression off, one buffer commit over the C deltas of a sync
+round reproduces the sync round step's new params to <= 1e-5 — async is a
+strict generalisation, not a different algorithm.
+
+Limits encoded here rather than left to callers:
+  * ``max_staleness`` — updates older than this are dropped by the
+    orchestrator (weight would be ~0 anyway; dropping keeps the buffer
+    from carrying dead weight).
+  * accumulation/aggregation happens in float32 regardless of param
+    dtype, like the sync path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.compression import compress_tree
+from repro.core.round import FLConfig, build_local_train, global_norm
+from repro.optim import Optimizer, ServerOptimizer
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Policy knobs of the buffered-asynchronous execution regime."""
+    buffer_size: int = 8            # K: commit every K buffered updates
+    staleness_exponent: float = 0.5  # a in 1/(1+s)^a  (0 -> no discount)
+    max_staleness: int = 20         # drop updates staler than this
+    commit_timeout_s: float = 0.0   # T: commit a partial buffer once its
+    #                                 oldest update has waited T sim-seconds
+    #                                 without a K-commit (0 = off)
+    max_concurrency: int = 16       # clients training at once
+
+    def __post_init__(self):
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {self.buffer_size}")
+        if self.max_concurrency < 1:
+            raise ValueError(
+                f"max_concurrency must be >= 1, got {self.max_concurrency}")
+        if self.max_staleness < 0 or self.staleness_exponent < 0 \
+                or self.commit_timeout_s < 0:
+            raise ValueError("max_staleness, staleness_exponent and "
+                             "commit_timeout_s must be non-negative")
+
+
+def staleness_weights(staleness, exponent: float):
+    """The FedBuff polynomial discount ``1 / (1 + s)^a``.
+
+    ``staleness`` counts server commits between a client's dispatch and its
+    update's arrival; works on jnp or np arrays (used as its own NumPy
+    reference in tests)."""
+    return (1.0 + staleness) ** (-exponent)
+
+
+def build_client_update_step(loss_fn: Callable, client_opt: Optimizer,
+                             cfg: FLConfig, param_shardings=None):
+    """jit-able ``(params_snapshot, batches[H, b, ...], rng) -> (delta, loss)``.
+
+    Exactly the sync path's local training (same FedProx handling, same
+    optimizer), run for ONE client against the params snapshot it was
+    dispatched with."""
+    return build_local_train(loss_fn, client_opt, cfg, param_shardings)
+
+
+def build_buffer_commit_step(server_opt: ServerOptimizer, cfg: FLConfig,
+                             async_cfg: AsyncConfig):
+    """jit-able server commit over a fixed-size buffer of K client deltas.
+
+    commit(params, server_state, deltas, weights, staleness, losses, mask,
+           rng) -> (new_params, new_server_state, metrics)
+
+    ``deltas`` leaves are [K, ...]; ``weights``/``staleness``/``losses``/
+    ``mask`` are [K].  Padding slots carry mask 0 (their deltas never
+    contribute).  ``losses`` feeds the "weighted" aggregation mode exactly
+    as in the sync round; "trimmed_mean" is rejected at build time —
+    coordinate-wise trimming over a staleness-discounted partial buffer has
+    no agreed semantics yet (ROADMAP open item).
+    """
+    if cfg.aggregation == "trimmed_mean":
+        raise ValueError(
+            "aggregation='trimmed_mean' is not supported by the async "
+            "buffered commit (robust trimming over a padded, "
+            "staleness-weighted buffer is undefined); use fedavg/weighted "
+            "or the sync round loop")
+    K = async_cfg.buffer_size
+
+    def commit(params, server_state, deltas, weights, staleness, losses,
+               mask, rng):
+        w_raw = agg.effective_weights(weights, mask, losses, cfg.aggregation)
+        w = w_raw * staleness_weights(staleness.astype(jnp.float32),
+                                      async_cfg.staleness_exponent)
+        crng = jax.random.split(rng, K)
+        deltas = jax.vmap(lambda d, r: compress_tree(d, cfg.compression, r))(
+            deltas, crng)
+        # normalise by the UN-discounted weight mass: a uniformly-stale
+        # buffer must take a proportionally smaller server step (FedBuff),
+        # not have its discount cancel out in the mean's denominator
+        delta = agg.weighted_mean(deltas, w)
+        shrink = (w.sum() / jnp.maximum(w_raw.sum(), 1e-12)).astype(jnp.float32)
+        delta = jax.tree.map(lambda d: d * shrink.astype(d.dtype), delta)
+        new_params, new_state = server_opt.apply(params, delta, server_state)
+        metrics = {
+            "delta_norm": global_norm(delta),
+            "n_updates": mask.sum(),
+            "mean_staleness": (staleness * mask).sum()
+            / jnp.maximum(mask.sum(), 1),
+            "effective_weight": w.sum(),
+        }
+        return new_params, new_state, metrics
+
+    return commit

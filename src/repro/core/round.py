@@ -42,6 +42,8 @@ def _axes_tuple(ax):
 
 @dataclass(frozen=True)
 class FLConfig:
+    mode: str = "sync"                # sync (barrier rounds) | async (FedBuff
+    #                                   buffered commits; see core.async_round)
     num_clients: int = 8              # clients per round (C)
     local_steps: int = 2              # H local epochs/steps per round
     client_lr: float = 0.05

@@ -23,14 +23,14 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import CompressionConfig, FLConfig
+from repro.core import AsyncConfig, CompressionConfig, FLConfig
 from repro.data import (FederatedDataset, cifar10_like, medmnist_like,
                         partition_by_class, partition_by_group,
                         shakespeare_like)
 from repro.models import build_model
 from repro.models.cnn import CIFAR_CNN, CNN, MEDMNIST_CNN
-from repro.orchestrator import (FaultConfig, Orchestrator, StragglerPolicy,
-                                make_hybrid_fleet)
+from repro.orchestrator import (AsyncOrchestrator, FaultConfig, Orchestrator,
+                                StragglerPolicy, make_hybrid_fleet)
 from repro.sched import HybridAdapter, JobSpec
 
 
@@ -82,6 +82,17 @@ def main():
     ap.add_argument("--dataset", default="cifar10",
                     choices=["cifar10", "medmnist", "shakespeare"])
     ap.add_argument("--algo", default="fedavg", choices=["fedavg", "fedprox"])
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="sync: barrier rounds; async: FedBuff buffered "
+                         "commits (--rounds then counts server commits)")
+    ap.add_argument("--buffer-k", type=int, default=8,
+                    help="async: commit every K buffered updates")
+    ap.add_argument("--staleness-exp", type=float, default=0.5,
+                    help="async: staleness discount 1/(1+s)^a")
+    ap.add_argument("--max-staleness", type=int, default=20)
+    ap.add_argument("--commit-timeout", type=float, default=0.0,
+                    help="async: commit a partial buffer after T sim-seconds")
+    ap.add_argument("--max-concurrency", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-pool", type=int, default=60)
     ap.add_argument("--clients-per-round", type=int, default=20)
@@ -108,6 +119,7 @@ def main():
     fed, model, params, eval_fn = build_task(args.dataset, args.clients_pool,
                                              args.seed)
     fl = FLConfig(
+        mode=args.mode,
         num_clients=args.clients_per_round, local_steps=args.local_steps,
         client_lr=args.lr, fedprox_mu=args.mu if args.algo == "fedprox" else 0.0,
         compression=CompressionConfig(quantize_bits=args.quantize_bits,
@@ -121,24 +133,59 @@ def main():
     if args.render_jobs:
         n = render_jobs(fleet, Path(args.render_jobs))
         print(f"rendered {n} scheduler artifacts -> {args.render_jobs}")
-    orch = Orchestrator(
-        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
-        server_opt_name=args.server_opt, selection_name=args.selection,
-        straggler=StragglerPolicy(deadline_s=args.deadline_s,
-                                  fastest_k=args.fastest_k),
-        faults=FaultConfig(dropout_prob=args.dropout_prob),
-        batch_size=args.batch_size, flops_per_client_round=3e12,
-        eval_fn=eval_fn, eval_every=10,
-        checkpoint_mgr=CheckpointManager(args.checkpoint_dir)
-        if args.checkpoint_dir else None,
-        checkpoint_every=args.checkpoint_every, seed=args.seed)
-    params, _ = orch.run(params, args.rounds, verbose=True)
-    summary = {
-        "dataset": args.dataset, "algo": args.algo, "rounds": args.rounds,
-        "final_eval": orch.logs[-1].eval_metric,
-        "virtual_time_s": orch.virtual_clock,
-        "mean_bytes_per_client_round": orch.comm.mean_bytes_per_client_round(),
-    }
+    if args.mode == "async":
+        if args.checkpoint_dir:
+            raise SystemExit(
+                "--checkpoint-dir is not supported with --mode async yet "
+                "(in-flight buffer + event heap need serialising; ROADMAP "
+                "open item)")
+        if args.deadline_s or args.fastest_k:
+            print("warning: --deadline-s/--fastest-k are barrier-round "
+                  "mitigations; the async regime ignores them (staleness "
+                  "discounting replaces them)")
+        orch = AsyncOrchestrator(
+            fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
+            async_cfg=AsyncConfig(buffer_size=args.buffer_k,
+                                  staleness_exponent=args.staleness_exp,
+                                  max_staleness=args.max_staleness,
+                                  commit_timeout_s=args.commit_timeout,
+                                  max_concurrency=args.max_concurrency),
+            server_opt_name=args.server_opt, selection_name=args.selection,
+            straggler=StragglerPolicy(),
+            faults=FaultConfig(dropout_prob=args.dropout_prob),
+            batch_size=args.batch_size, flops_per_client_round=3e12,
+            eval_fn=eval_fn, eval_every=10, seed=args.seed)
+        params, _ = orch.run(params, args.rounds, verbose=True)
+        summary = {
+            "dataset": args.dataset, "algo": args.algo, "mode": "async",
+            "commits": orch.version,
+            "updates_applied": orch.updates_applied,
+            "dropped_stale": orch.dropped_stale,
+            "final_eval": orch.logs[-1].eval_metric if orch.logs else None,
+            "virtual_time_s": orch.clock,
+            "updates_per_sim_s": orch.updates_per_sim_second,
+        }
+    else:
+        orch = Orchestrator(
+            fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
+            server_opt_name=args.server_opt, selection_name=args.selection,
+            straggler=StragglerPolicy(deadline_s=args.deadline_s,
+                                      fastest_k=args.fastest_k),
+            faults=FaultConfig(dropout_prob=args.dropout_prob),
+            batch_size=args.batch_size, flops_per_client_round=3e12,
+            eval_fn=eval_fn, eval_every=10,
+            checkpoint_mgr=CheckpointManager(args.checkpoint_dir)
+            if args.checkpoint_dir else None,
+            checkpoint_every=args.checkpoint_every, seed=args.seed)
+        params, _ = orch.run(params, args.rounds, verbose=True)
+        summary = {
+            "dataset": args.dataset, "algo": args.algo, "mode": "sync",
+            "rounds": args.rounds,
+            "final_eval": orch.logs[-1].eval_metric,
+            "virtual_time_s": orch.virtual_clock,
+            "mean_bytes_per_client_round":
+                orch.comm.mean_bytes_per_client_round(),
+        }
     print(json.dumps(summary, indent=1))
 
 

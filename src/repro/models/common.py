@@ -153,7 +153,39 @@ def cross_entropy_logits(logits, targets, vocab: int, chunk: int = 0):
     return ce(logits, targets).mean()
 
 
+@jax.custom_vjp
+def _take_matmul_bwd(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def _take_fwd(table, tokens):
+    # the table rides along as residual only for its shape/dtype (it is a
+    # live parameter anyway; residuals must be JAX types)
+    return jnp.take(table, tokens, axis=0), (tokens, table)
+
+
+def _take_bwd(res, g):
+    tokens, table = res
+    # one-hot contraction instead of scatter-add: exact (one nonzero per
+    # row) and partitions cleanly under GSPMD
+    oh = jax.nn.one_hot(tokens, table.shape[0], dtype=g.dtype)
+    return (jnp.einsum("...v,...d->vd", oh, g).astype(table.dtype), None)
+
+
+_take_matmul_bwd.defvjp(_take_fwd, _take_bwd)
+
+
 def take_embedding(table, tokens):
     """Embedding lookup.  Table is [V, D] with V replicated (D may be
-    model-sharded) so the gather stays local on every shard."""
+    model-sharded) so the gather stays local on every shard.
+
+    When a mesh with a non-trivial `model` axis is active, the backward pass
+    uses a one-hot contraction instead of the gather's scatter-add
+    transpose: XLA SPMD mis-partitions that scatter when the table's D dim
+    is model-sharded (NaN embed cotangents, observed with the MoE archs on
+    an 8-way CPU mesh).  The forward stays a cheap O(B*S*D) gather in every
+    regime; only the cotangent pays the [*, V] one-hot."""
+    mesh = sh.get_mesh()
+    if mesh is not None and dict(mesh.shape).get(sh.MODEL, 1) > 1:
+        return _take_matmul_bwd(table, tokens)
     return jnp.take(table, tokens, axis=0)

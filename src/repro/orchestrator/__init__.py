@@ -3,3 +3,4 @@ from repro.orchestrator.selection import AdaptiveSelection, RandomSelection, get
 from repro.orchestrator.straggler import StragglerPolicy, apply_mitigation, simulate_round_times  # noqa: F401
 from repro.orchestrator.fault import FaultConfig, FaultInjector  # noqa: F401
 from repro.orchestrator.server import Orchestrator, RoundLog  # noqa: F401
+from repro.orchestrator.async_server import AsyncOrchestrator, CommitLog, PendingUpdate  # noqa: F401

@@ -1,0 +1,297 @@
+"""Event-driven asynchronous orchestrator (FedBuff execution regime).
+
+Replaces the per-round barrier of ``Orchestrator`` with a simulated event
+queue: up to ``max_concurrency`` clients train concurrently, each against
+the params snapshot current at its dispatch; finish times come from
+``simulate_round_times`` (heterogeneous profiles + lognormal contention
+noise), so fast HPC nodes lap slow cloud VMs instead of waiting for them.
+Updates land in a bounded buffer; the server commits every K arrivals or
+after ``commit_timeout_s`` sim-seconds of buffered quiet, discounting each
+update by its staleness (commits elapsed since dispatch).
+
+Host-side only, deterministic under a fixed seed: the heap is ordered by
+(arrival_time, dispatch_seq) and every random draw flows from the seeded
+generators.  The heavy math is the pair of jit'd steps from
+repro.core.async_round; per-update bytes/time cross the CommAccountant
+exactly as in the sync orchestrator (down at dispatch, up at arrival).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.transport import CommAccountant, link_for_site
+from repro.core.async_round import (AsyncConfig, build_buffer_commit_step,
+                                    build_client_update_step)
+from repro.core.compression import payload_bytes
+from repro.core.round import FLConfig
+from repro.optim import get_client_optimizer, get_server_optimizer
+from repro.orchestrator.fault import FaultConfig, FaultInjector
+from repro.orchestrator.selection import get_selection
+from repro.orchestrator.straggler import StragglerPolicy, simulate_round_times
+
+
+@dataclass
+class PendingUpdate:
+    """One in-flight client update travelling through the event queue."""
+    seq: int                    # dispatch order (heap tie-break)
+    cid: int
+    client_idx: int             # index into the fleet list
+    dispatch_version: int       # server commit counter at dispatch
+    dispatch_time: float
+    duration_s: float
+    delta: object = None        # pytree (None if the client faulted)
+    loss: float = float("nan")
+    weight: float = 1.0
+    failed: bool = False
+
+
+@dataclass
+class CommitLog:
+    commit: int
+    sim_time: float
+    n_updates: int
+    mean_staleness: float
+    max_staleness: int
+    client_loss: float
+    delta_norm: float
+    bytes_up: int
+    timeout_commit: bool = False
+    eval_metric: float = float("nan")
+
+
+@dataclass
+class AsyncOrchestrator:
+    fleet: list                       # list[ClientInfo]
+    fed_data: object                  # FederatedDataset
+    loss_fn: Callable                 # (params, batch) -> (loss, aux)
+    fl: FLConfig
+    async_cfg: AsyncConfig = field(default_factory=AsyncConfig)
+    client_opt_name: str = "sgd"
+    server_opt_name: str = "fedavg"
+    server_opt_kw: dict = field(default_factory=dict)
+    selection_name: str = "adaptive"
+    straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+    faults: FaultConfig = field(default_factory=FaultConfig)
+    batch_size: int = 16
+    flops_per_client_round: float = 1e12
+    eval_fn: Optional[Callable] = None     # (params) -> float metric
+    eval_every: int = 10                   # in commits
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.fl.mode != "async":
+            raise ValueError(
+                f"AsyncOrchestrator requires FLConfig(mode='async'), got "
+                f"mode={self.fl.mode!r}; use Orchestrator for the "
+                f"synchronous barrier loop")
+        self.rng = np.random.default_rng(self.seed)
+        self.jrng = jax.random.PRNGKey(self.seed)
+        self.selection = get_selection(self.selection_name, seed=self.seed)
+        self.fault_injector = FaultInjector(self.faults, seed=self.seed + 1)
+        self.comm = CommAccountant()
+        self.logs: list[CommitLog] = []
+        client_opt = get_client_optimizer(self.client_opt_name)
+        server_opt = get_server_optimizer(self.server_opt_name,
+                                          **self.server_opt_kw)
+        self._server_opt = server_opt
+        self._client_update = jax.jit(build_client_update_step(
+            self.loss_fn, client_opt, self.fl))
+        self._commit_step = jax.jit(build_buffer_commit_step(
+            server_opt, self.fl, self.async_cfg))
+        # simulation state
+        self.clock = 0.0
+        self.version = 0              # server commit counter
+        self.updates_applied = 0      # accepted client updates committed
+        self.dropped_stale = 0
+        self._seq = 0
+        self._events: list = []       # heap of (arrival_time, seq, PendingUpdate)
+        self._inflight: set[int] = set()   # cids currently training
+        self._buffer: list[tuple] = []     # [(PendingUpdate, arrival_time)]
+        self._buffer_bytes = 0
+
+    # ------------------------------------------------------------------
+    def init_server_state(self, params):
+        return self._server_opt.init(params)
+
+    def _payload_bytes_cache(self, params):
+        if not hasattr(self, "_pb"):
+            self._pb = payload_bytes(params, self.fl.compression)
+        return self._pb
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch_one(self, params, now: float):
+        """Hand the current params to one idle client; schedule its arrival."""
+        avail = [c for c in self.fleet if c.cid not in self._inflight]
+        if not avail:
+            return False
+        sel = self.selection.select(avail, 1, self._seq)
+        client_idx = next(i for i, c in enumerate(self.fleet)
+                          if c.cid == sel[0])
+        client = self.fleet[client_idx]
+        upd_bytes = self._payload_bytes_cache(params)
+        dur = float(simulate_round_times(
+            [client], self.flops_per_client_round, upd_bytes, self.rng,
+            self.straggler)[0])
+        # the injector's round clock advances per COMMIT (the async analogue
+        # of a round, in _do_commit) so FaultConfig partition probabilities /
+        # durations keep their sync-round units; only the survival dice roll
+        # happens per dispatch
+        failed = bool(self.fault_injector.survive_mask([client])[0] == 0)
+
+        upd = PendingUpdate(seq=self._seq, cid=client.cid,
+                            client_idx=client_idx,
+                            dispatch_version=self.version,
+                            dispatch_time=now, duration_s=dur, failed=failed)
+        if not failed:
+            # the client trains against the params snapshot it is handed NOW;
+            # staleness accrues from commits landing while it runs.
+            batches = self.fed_data.sample_round([client.cid],
+                                                 self.fl.local_steps,
+                                                 self.batch_size)
+            batches = jax.tree.map(lambda x: jnp.asarray(x[0]), batches)
+            self.jrng, r = jax.random.split(self.jrng)
+            delta, loss = self._client_update(params, batches, r)
+            upd.delta = delta
+            upd.loss = float(loss)
+            upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
+        link = link_for_site(client.site)
+        self.comm.log(self.version, client.cid, "down", upd_bytes, link)
+        self._inflight.add(client.cid)
+        heapq.heappush(self._events, (now + dur, self._seq, upd))
+        self._seq += 1
+        return True
+
+    # --------------------------------------------------------------- commit
+    def _stack_buffer(self):
+        """Pad the live buffer to K and stack it for the jit'd commit step."""
+        K = self.async_cfg.buffer_size
+        ups = [u for u, _ in self._buffer]
+        zero = jax.tree.map(jnp.zeros_like, ups[0].delta)
+        deltas = [u.delta for u in ups] + [zero] * (K - len(ups))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        pad = K - len(ups)
+        weights = jnp.asarray([u.weight for u in ups] + [0.0] * pad,
+                              jnp.float32)
+        stal = [self.version - u.dispatch_version for u in ups]
+        staleness = jnp.asarray(stal + [0] * pad, jnp.float32)
+        losses = jnp.asarray([u.loss for u in ups] + [0.0] * pad, jnp.float32)
+        mask = jnp.asarray([1.0] * len(ups) + [0.0] * pad, jnp.float32)
+        return stacked, weights, staleness, losses, mask, stal, ups
+
+    def _do_commit(self, params, server_state, at_time: float,
+                   timeout: bool = False):
+        (stacked, weights, staleness, losses, mask, stal,
+         ups) = self._stack_buffer()
+        self.jrng, r = jax.random.split(self.jrng)
+        params, server_state, metrics = self._commit_step(
+            params, server_state, stacked, weights, staleness, losses, mask,
+            r)
+        self.version += 1
+        self.fault_injector.step_round()
+        self.updates_applied += len(ups)
+        losses = [u.loss for u in ups if np.isfinite(u.loss)]
+        log = CommitLog(
+            commit=self.version, sim_time=at_time, n_updates=len(ups),
+            mean_staleness=float(np.mean(stal)) if stal else 0.0,
+            max_staleness=int(max(stal)) if stal else 0,
+            client_loss=float(np.mean(losses)) if losses else float("nan"),
+            delta_norm=float(metrics["delta_norm"]),
+            bytes_up=self._buffer_bytes, timeout_commit=timeout)
+        if self.eval_fn and (self.version % self.eval_every == 0):
+            log.eval_metric = float(self.eval_fn(params))
+        self.logs.append(log)
+        self._buffer = []
+        self._buffer_bytes = 0
+        return params, server_state
+
+    def _flush_timeouts(self, params, server_state, now: float):
+        """Commit a partial buffer whose oldest update has waited >= T.
+
+        The deadline is (oldest buffered arrival + T), not (last commit + T):
+        the latter could stamp a commit at a sim-time BEFORE the buffer's
+        first update even arrived when arrivals are sparse.  Every buffered
+        update arrived no later than the previous event pop, so all of them
+        predate the deadline."""
+        T = self.async_cfg.commit_timeout_s
+        if not T:
+            return params, server_state
+        while self._buffer and self._buffer[0][1] + T <= now:
+            params, server_state = self._do_commit(
+                params, server_state, self._buffer[0][1] + T, timeout=True)
+        return params, server_state
+
+    # ------------------------------------------------------------------ run
+    def run(self, params, num_commits: int, server_state=None,
+            max_sim_time: float = 0.0, verbose: bool = False):
+        """Run until `num_commits` server commits (or `max_sim_time`)."""
+        if server_state is None:
+            server_state = self.init_server_state(params)
+        # top up to the concurrency cap; a continuation run may already have
+        # clients in flight (their events were pushed back at the budget cut)
+        target = min(self.async_cfg.max_concurrency, len(self.fleet))
+        for _ in range(max(0, target - len(self._inflight))):
+            self._dispatch_one(params, self.clock)
+
+        while self._events and self.version < num_commits:
+            t, seq, upd = heapq.heappop(self._events)
+            if max_sim_time and t > max_sim_time:
+                # budget exhausted before this arrival: flush any timeout
+                # deadlines that fall inside the budget, put the event back
+                # so a continuation run can still process it, and pin the
+                # clock to the budget actually simulated
+                params, server_state = self._flush_timeouts(
+                    params, server_state, max_sim_time)
+                heapq.heappush(self._events, (t, seq, upd))
+                self.clock = max_sim_time
+                break
+            params, server_state = self._flush_timeouts(params, server_state, t)
+            if self.version >= num_commits:
+                heapq.heappush(self._events, (t, seq, upd))
+                break
+            self.clock = max(self.clock, t)
+            self._inflight.discard(upd.cid)
+            client = self.fleet[upd.client_idx]
+            # history in dispatch-counter units, matching what select() sees
+            client.record(not upd.failed, upd.duration_s, self._seq)
+            if not upd.failed:
+                # the client transmitted regardless of what the server does
+                # with the update — dropped-as-stale still paid the uplink
+                upd_bytes = self._payload_bytes_cache(params)
+                self.comm.log(self.version, upd.cid, "up", upd_bytes,
+                              link_for_site(client.site))
+                staleness = self.version - upd.dispatch_version
+                if staleness > self.async_cfg.max_staleness:
+                    self.dropped_stale += 1
+                else:
+                    self._buffer.append((upd, t))
+                    self._buffer_bytes += upd_bytes
+            if len(self._buffer) >= self.async_cfg.buffer_size:
+                params, server_state = self._do_commit(params, server_state, t)
+                if verbose and self.logs:
+                    lg = self.logs[-1]
+                    print(f"commit {lg.commit:4d} t={lg.sim_time:8.1f}s "
+                          f"loss={lg.client_loss:.4f} "
+                          f"stale={lg.mean_staleness:.1f} "
+                          f"eval={lg.eval_metric:.4f}")
+            self._dispatch_one(params, self.clock)
+        # sync run() forces an eval on the final round; mirror that so the
+        # terminal commit always carries a real metric
+        if self.eval_fn and self.logs and not np.isfinite(
+                self.logs[-1].eval_metric):
+            self.logs[-1].eval_metric = float(self.eval_fn(params))
+        return params, server_state
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def commits_per_sim_second(self) -> float:
+        return self.version / self.clock if self.clock else 0.0
+
+    @property
+    def updates_per_sim_second(self) -> float:
+        return self.updates_applied / self.clock if self.clock else 0.0

@@ -63,6 +63,11 @@ class Orchestrator:
     seed: int = 0
 
     def __post_init__(self):
+        if self.fl.mode != "sync":
+            raise ValueError(
+                f"Orchestrator runs the synchronous barrier loop but got "
+                f"FLConfig(mode={self.fl.mode!r}); use AsyncOrchestrator "
+                f"for mode='async'")
         self.rng = np.random.default_rng(self.seed)
         self.jrng = jax.random.PRNGKey(self.seed)
         self.selection = get_selection(self.selection_name, seed=self.seed)

@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow    # per-arch builds: minutes of CPU compile
+
 
 def make_batch(cfg, B=2, S=16, seed=0):
     rng = jax.random.PRNGKey(seed)

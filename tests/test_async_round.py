@@ -1,0 +1,226 @@
+"""Async (FedBuff-style) aggregation semantics: staleness weighting vs a
+NumPy reference, buffer-commit math, and the acceptance-criterion
+equivalence — async with zero staleness matches the sync round step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AsyncConfig, CompressionConfig, FLConfig,
+                        build_buffer_commit_step, build_client_update_step,
+                        build_fl_round_step, staleness_weights)
+from repro.models import build_model
+from repro.optim import get_client_optimizer, get_server_optimizer
+
+C, H, b, S = 4, 2, 2, 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("paper-charlm").replace(n_layers=2, d_model=64, d_ff=128,
+                                             n_heads=2, kv_heads=2)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (C, H, b, S + 1), 0,
+                              cfg.vocab, jnp.int32)
+    batches = {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+    return m, params, batches
+
+
+# ------------------------------------------------------------ staleness math
+def test_staleness_weights_match_numpy_reference():
+    s = np.array([0, 1, 2, 5, 20], np.float32)
+    for a in (0.0, 0.5, 1.0, 2.0):
+        ref = 1.0 / (1.0 + s) ** a
+        got = np.asarray(staleness_weights(jnp.asarray(s), a))
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_staleness_weights_monotone_and_fresh_is_one():
+    s = jnp.arange(0, 30, dtype=jnp.float32)
+    w = np.asarray(staleness_weights(s, 0.7))
+    assert w[0] == pytest.approx(1.0)
+    assert (np.diff(w) < 0).all()          # strictly decreasing in staleness
+    assert (w > 0).all()                   # discounted, never discarded
+
+
+def test_zero_exponent_disables_discount():
+    s = jnp.asarray([0.0, 3.0, 17.0])
+    np.testing.assert_allclose(np.asarray(staleness_weights(s, 0.0)),
+                               np.ones(3))
+
+
+# ------------------------------------------------------------- commit step
+def _commit(fl, acfg, params, deltas, weights, staleness, mask, rng=None,
+            losses=None):
+    sopt = get_server_optimizer("fedavg")
+    step = jax.jit(build_buffer_commit_step(sopt, fl, acfg))
+    if losses is None:
+        losses = jnp.zeros_like(weights)
+    return step(params, sopt.init(params), deltas, weights, staleness,
+                losses, mask,
+                rng if rng is not None else jax.random.PRNGKey(0))
+
+
+def test_commit_matches_numpy_weighted_mean():
+    """Commit over a toy buffer == NumPy staleness-discounted mean,
+    normalised by the UN-discounted weight mass (FedBuff step shrinkage)."""
+    K, a = 4, 0.5
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(K, 3, 5)).astype(np.float32)
+    w = np.array([2.0, 1.0, 3.0, 1.5], np.float32)
+    s = np.array([0, 2, 1, 5], np.float32)
+    params = {"x": jnp.zeros((3, 5), jnp.float32)}
+    fl = FLConfig(mode="async")
+    acfg = AsyncConfig(buffer_size=K, staleness_exponent=a)
+    new_p, _, metrics = _commit(
+        fl, acfg, params, {"x": jnp.asarray(d)}, jnp.asarray(w),
+        jnp.asarray(s), jnp.ones(K))
+    w_eff = w / (1.0 + s) ** a
+    ref = (d * w_eff[:, None, None]).sum(0) / w.sum()
+    np.testing.assert_allclose(np.asarray(new_p["x"]), ref, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(metrics["n_updates"]), K)
+
+
+def test_uniformly_stale_buffer_takes_shrunken_step():
+    """The discount must shrink the ABSOLUTE step, not cancel in the mean:
+    a buffer where every update has staleness s steps 1/(1+s)^a as far as
+    a fresh one."""
+    K, a, s = 3, 1.0, 4.0
+    params = {"x": jnp.zeros((4,), jnp.float32)}
+    d = {"x": jnp.ones((K, 4), jnp.float32)}
+    fl, acfg = FLConfig(mode="async"), AsyncConfig(buffer_size=K,
+                                                   staleness_exponent=a)
+    p_fresh, _, _ = _commit(fl, acfg, params, d, jnp.ones(K), jnp.zeros(K),
+                            jnp.ones(K))
+    p_stale, _, _ = _commit(fl, acfg, params, d, jnp.ones(K),
+                            jnp.full(K, s), jnp.ones(K))
+    np.testing.assert_allclose(np.asarray(p_fresh["x"]), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p_stale["x"]), 1.0 / (1.0 + s),
+                               rtol=1e-5)
+
+
+def test_commit_padding_slots_never_contribute():
+    """mask-0 padding (timeout commits) is invisible to the aggregate."""
+    K = 4
+    params = {"x": jnp.zeros((8,), jnp.float32)}
+    d_live = np.random.default_rng(1).normal(size=(2, 8)).astype(np.float32)
+    fl, acfg = FLConfig(mode="async"), AsyncConfig(buffer_size=K)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    wts = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    stal = jnp.zeros(K)
+    pad_zero = np.concatenate([d_live, np.zeros((2, 8), np.float32)])
+    pad_poison = np.concatenate([d_live, np.full((2, 8), 1e6, np.float32)])
+    p1, _, _ = _commit(fl, acfg, params, {"x": jnp.asarray(pad_zero)},
+                       wts, stal, mask)
+    p2, _, _ = _commit(fl, acfg, params, {"x": jnp.asarray(pad_poison)},
+                       wts, stal, mask)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6)
+
+
+def test_weighted_mode_prefers_low_loss_updates():
+    """aggregation='weighted' uses buffered client losses like the sync
+    round: a low-loss client's delta outweighs a high-loss one."""
+    K = 2
+    params = {"x": jnp.zeros((4,), jnp.float32)}
+    d = jnp.asarray([[1.0] * 4, [-1.0] * 4], jnp.float32)
+    fl = FLConfig(mode="async", aggregation="weighted")
+    acfg = AsyncConfig(buffer_size=K, staleness_exponent=0.0)
+    p, _, _ = _commit(fl, acfg, params, {"x": d}, jnp.ones(K), jnp.zeros(K),
+                      jnp.ones(K), losses=jnp.asarray([0.0, 9.0]))
+    # w = [1/(1+0), 1/(1+9)] -> (1 - 0.1) / 1.1
+    np.testing.assert_allclose(np.asarray(p["x"]), 0.9 / 1.1, rtol=1e-5)
+
+
+def test_trimmed_mean_rejected_at_build_time():
+    """Robust trimming over a padded staleness buffer is undefined; the
+    build must fail loudly rather than silently degrade to a mean."""
+    with pytest.raises(ValueError, match="trimmed_mean"):
+        build_buffer_commit_step(get_server_optimizer("fedavg"),
+                                 FLConfig(mode="async",
+                                          aggregation="trimmed_mean"),
+                                 AsyncConfig(buffer_size=2))
+
+
+def test_stale_update_downweighted_in_aggregate():
+    """A very stale delta moves the aggregate less than a fresh one."""
+    K = 2
+    params = {"x": jnp.zeros((4,), jnp.float32)}
+    d = jnp.asarray([[1.0, 1.0, 1.0, 1.0], [-1.0, -1.0, -1.0, -1.0]],
+                    jnp.float32)
+    fl = FLConfig(mode="async")
+    acfg = AsyncConfig(buffer_size=K, staleness_exponent=1.0)
+    # client 1 (the -1 delta) is 9 commits stale -> weight 1/10; the
+    # denominator is the raw weight mass (2), so the step also shrinks
+    p, _, _ = _commit(fl, acfg, params, {"x": d}, jnp.ones(K),
+                      jnp.asarray([0.0, 9.0]), jnp.ones(K))
+    out = np.asarray(p["x"])
+    assert (out > 0).all()                      # fresh +1 client dominates
+    np.testing.assert_allclose(out, (1.0 - 0.1) / 2.0, rtol=1e-5)
+
+
+# ----------------------------------------------- sync/async equivalence
+def test_zero_staleness_commit_equals_sync_round(setup):
+    """Acceptance criterion: deltas computed per-client via the async client
+    step and committed with zero staleness reproduce the sync round step's
+    new params to <= 1e-5."""
+    m, params, batches = setup
+    fl = FLConfig(num_clients=C, local_steps=H, client_lr=0.1)
+    copt, sopt = get_client_optimizer("sgd"), get_server_optimizer("fedavg")
+
+    sync_step = jax.jit(build_fl_round_step(m.loss_fn, copt, sopt, fl))
+    weights = jnp.ones((C,))
+    mask = jnp.ones((C,))
+    rng = jax.random.PRNGKey(2)
+    p_sync, _, _ = sync_step(params, (), batches, weights, mask, rng)
+
+    # async path: per-client updates with the SAME per-client rngs the sync
+    # vmap used, then one zero-staleness buffer commit of all C deltas
+    client_step = jax.jit(build_client_update_step(m.loss_fn, copt, fl))
+    rngs = jax.random.split(rng, C)
+    deltas, _losses = [], []
+    for c in range(C):
+        d, l = client_step(params, jax.tree.map(lambda x: x[c], batches),
+                           rngs[c])
+        deltas.append(d)
+        _losses.append(l)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    commit = jax.jit(build_buffer_commit_step(
+        sopt, fl, AsyncConfig(buffer_size=C, staleness_exponent=0.5)))
+    p_async, _, _ = commit(params, (), stacked, weights, jnp.zeros(C),
+                           jnp.zeros(C), mask, rng)
+    for a, b_ in zip(jax.tree.leaves(p_sync), jax.tree.leaves(p_async)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_commit_applies_compression_pipeline(setup):
+    """The buffered path compresses what crosses the wire, like sync."""
+    m, params, batches = setup
+    fl = FLConfig(num_clients=C, local_steps=H, client_lr=0.1)
+    flq = FLConfig(num_clients=C, local_steps=H, client_lr=0.1,
+                   compression=CompressionConfig(quantize_bits=8,
+                                                 stochastic_rounding=False))
+    copt, sopt = get_client_optimizer("sgd"), get_server_optimizer("fedavg")
+    client_step = jax.jit(build_client_update_step(m.loss_fn, copt, fl))
+    rngs = jax.random.split(jax.random.PRNGKey(2), C)
+    deltas = [client_step(params, jax.tree.map(lambda x: x[c], batches),
+                          rngs[c])[0] for c in range(C)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    acfg = AsyncConfig(buffer_size=C)
+    args = (stacked, jnp.ones(C), jnp.zeros(C), jnp.zeros(C), jnp.ones(C),
+            jax.random.PRNGKey(3))
+    p_raw, _, _ = jax.jit(build_buffer_commit_step(sopt, fl, acfg))(
+        params, (), *args)
+    p_q, _, _ = jax.jit(build_buffer_commit_step(sopt, flq, acfg))(
+        params, (), *args)
+    diffs = [float(jnp.abs(a - b_).max()) for a, b_ in
+             zip(jax.tree.leaves(p_raw), jax.tree.leaves(p_q))]
+    assert max(diffs) > 0                     # quantization actually applied
+    rel = [float(jnp.abs(a - b_).mean() / (jnp.abs(a - c).mean() + 1e-12))
+           for a, b_, c in zip(jax.tree.leaves(p_raw), jax.tree.leaves(p_q),
+                               jax.tree.leaves(params))]
+    assert max(rel) < 0.1                     # but a faithful approximation

@@ -9,6 +9,8 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow    # per-arch prefill+decode: minutes on CPU
+
 # archs chosen to cover every cache type; starcoder2 exercises the sliding
 # window ring buffer (reduced window = 8 < S).
 ARCHS = ["granite-3-2b", "starcoder2-7b", "gemma-2b", "kimi-k2-1t-a32b",
