@@ -11,9 +11,33 @@ What it shows:
   * staleness-discounted aggregation (slow nodes land many commits late;
     their updates are down-weighted 1/(1+s)^0.5, never discarded unless
     staler than 30 commits),
-  * spot preemptions + dropouts folding into the same buffer semantics,
+  * spot preemptions + dropouts folding into the same buffer semantics —
+    preempted clients recover per FaultConfig.recovery_policy ("resume"
+    here: they re-enqueue from their last completed local step instead of
+    losing the attempt),
   * a head-to-head against the synchronous barrier loop on the SAME fleet
     and simulated-time budget.
+
+Killing and resuming an async run
+---------------------------------
+The async regime is crash-safe end to end: with a checkpoint dir the
+orchestrator snapshots its FULL state (global params, server opt state,
+pending-update buffer, in-flight event heap, commit log, every RNG stream)
+each --checkpoint-every commits and at exit, and --resume replays the exact
+trajectory the uninterrupted run would have taken (bit-identical params and
+commit log — pinned by tests/test_async_resume.py).  Try it:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --mode async --dataset medmnist --rounds 40 \
+        --buffer-k 4 --commit-timeout 60 --max-concurrency 12 \
+        --dropout-prob 0.1 --spot-preempt-prob 0.2 --recovery-policy resume \
+        --checkpoint-dir ckpts/async_run --checkpoint-every 5
+    # kill it at any point (Ctrl-C), then:
+    PYTHONPATH=src python -m repro.launch.train \
+        --mode async --dataset medmnist --rounds 40 \
+        --buffer-k 4 --commit-timeout 60 --max-concurrency 12 \
+        --dropout-prob 0.1 --spot-preempt-prob 0.2 --recovery-policy resume \
+        --checkpoint-dir ckpts/async_run --checkpoint-every 5 --resume
 """
 import jax
 import jax.numpy as jnp
@@ -38,7 +62,8 @@ fl = FLConfig(mode="async", num_clients=8, local_steps=2, client_lr=0.08,
               fedprox_mu=0.02,
               compression=CompressionConfig(quantize_bits=8))
 straggler = StragglerPolicy(contention_sigma=0.6)
-faults = FaultConfig(dropout_prob=0.1, spot_preempt_prob=0.2)
+faults = FaultConfig(dropout_prob=0.1, spot_preempt_prob=0.2,
+                     recovery_policy="resume")
 
 
 def fresh_fleet():
@@ -65,6 +90,10 @@ print(f"\n{anc.version} commits ({timeouts} by timeout), "
       f"{anc.dropped_stale} dropped as too stale, "
       f"mean staleness {np.mean([l.mean_staleness for l in anc.logs]):.2f}, "
       f"in {anc.clock:.0f} simulated seconds")
+print(f"fault recovery (policy={faults.recovery_policy}): "
+      f"{anc.recovered_updates} preempted attempts recovered "
+      f"(+{anc.recovery_time_total / max(anc.recovered_updates, 1):.1f}s mean "
+      f"delay), {anc.lost_to_faults} lost")
 
 # ------------------------------------------- sync baseline, same sim budget
 print("\n== sync barrier baseline on the same fleet & time budget ==")

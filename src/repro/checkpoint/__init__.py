@@ -1,1 +1,2 @@
 from repro.checkpoint.io import CheckpointManager, load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.async_state import AsyncCheckpointManager  # noqa: F401

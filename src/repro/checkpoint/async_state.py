@@ -1,0 +1,199 @@
+"""Crash-safe checkpoint/resume for the event-driven async regime.
+
+The synchronous Orchestrator is stateless-restartable from
+(params, server_state, round counter) alone; ``AsyncOrchestrator`` is not —
+between two commits it carries a pending-update buffer, an event heap of
+in-flight clients (each holding a trained delta against an old params
+snapshot), four independent RNG streams (dispatch/simulation, jax client
+keys, selection, fault injection), per-client data-sampler generators,
+fleet performance histories, the commit log and comm ledger.  Dropping any
+of it on restore forks the trajectory.
+
+``AsyncCheckpointManager`` serialises ALL of it:
+
+  round_%06d/
+    params.bin            global params            (serialize_tree)
+    server_state.bin      server optimizer state   (serialize_tree)
+    delta_%06d.bin        one file per pending update carrying a delta,
+                          keyed by its dispatch seq (in-flight or buffered)
+    async_state.json      every host-side scalar/RNG/heap/log field
+    meta.json             {round: commit counter, mode: "async", clock}
+
+Each snapshot is self-contained — it carries the full commit log, comm
+ledger and processed-event trace, which is what lets a restored run's
+history compare equal to a never-killed one.  The cost is snapshots that
+grow linearly with run length; for very long runs, checkpoint sparsely
+(``checkpoint_every``) rather than every commit.
+
+Restore targets a FRESHLY CONSTRUCTED orchestrator built with the same
+configuration (fleet layout, FLConfig/AsyncConfig, dataset seed); every
+stochastic stream is overwritten with the saved state, so
+
+    run(N)  ==  run-to-k -> kill -> restore -> run(N)
+
+bit-for-bit — the invariant ``tests/test_async_resume.py`` pins.
+"""
+from __future__ import annotations
+
+import heapq
+import json
+from dataclasses import asdict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import (CheckpointManager, _atomic_write, load_pytree,
+                                 save_pytree)
+
+_UPD_FIELDS = ("seq", "cid", "client_idx", "dispatch_version",
+               "dispatch_time", "duration_s", "loss", "weight", "failed",
+               "fault", "steps_done", "retries", "recovery_s")
+
+
+def _upd_meta(upd) -> dict:
+    d = {f: getattr(upd, f) for f in _UPD_FIELDS}
+    d["has_delta"] = upd.delta is not None
+    return d
+
+
+def async_state_dict(orch) -> tuple[dict, dict]:
+    """(json-serialisable host state, {seq: delta pytree} for pending work)."""
+    deltas = {}
+    events = []
+    for t, seq, upd in orch._events:
+        events.append({"time": t, **_upd_meta(upd)})
+        if upd.delta is not None:
+            deltas[upd.seq] = upd.delta
+    buffer = []
+    for upd, arrival in orch._buffer:
+        buffer.append({"arrival": arrival, **_upd_meta(upd)})
+        if upd.delta is not None:
+            deltas[upd.seq] = upd.delta
+    state = {
+        "config": {"buffer_size": orch.async_cfg.buffer_size,
+                   "local_steps": orch.fl.local_steps,
+                   "n_fleet": len(orch.fleet)},
+        "clock": orch.clock,
+        "version": orch.version,
+        "updates_applied": orch.updates_applied,
+        "dropped_stale": orch.dropped_stale,
+        "recovered_updates": orch.recovered_updates,
+        "lost_to_faults": orch.lost_to_faults,
+        "recovery_time_total": orch.recovery_time_total,
+        "seq": orch._seq,
+        "rng": orch.rng.bit_generator.state,
+        "jrng": np.asarray(orch.jrng, np.uint32).tolist(),
+        "selection_rng": orch.selection.rng.bit_generator.state,
+        "fault": orch.fault_injector.state(),
+        "data_rngs": [g.bit_generator.state for g in orch.fed_data._rngs],
+        "inflight": sorted(orch._inflight),
+        "buffer_bytes": orch._buffer_bytes,
+        "events": events,
+        "buffer": buffer,
+        "logs": [asdict(l) for l in orch.logs],
+        "comm": [asdict(r) for r in orch.comm.records],
+        "fleet": [{"cid": c.cid, "completions": c.completions,
+                   "failures": c.failures,
+                   "ema_round_time": c.ema_round_time,
+                   "last_selected_round": c.last_selected_round}
+                  for c in orch.fleet],
+        "events_processed": [list(e) for e in orch.events_processed],
+    }
+    return state, deltas
+
+
+def load_async_state(orch, state: dict, deltas: dict):
+    """Overwrite a freshly constructed orchestrator's mutable state."""
+    from repro.comm.transport import TransferRecord
+    from repro.orchestrator.async_server import CommitLog, PendingUpdate
+
+    cfg = state["config"]
+    if cfg["buffer_size"] != orch.async_cfg.buffer_size \
+            or cfg["local_steps"] != orch.fl.local_steps \
+            or cfg["n_fleet"] != len(orch.fleet):
+        raise ValueError(
+            f"checkpoint was written by an orchestrator with config {cfg}; "
+            f"restore requires an identically configured one")
+    orch.clock = float(state["clock"])
+    orch.version = int(state["version"])
+    orch.updates_applied = int(state["updates_applied"])
+    orch.dropped_stale = int(state["dropped_stale"])
+    orch.recovered_updates = int(state["recovered_updates"])
+    orch.lost_to_faults = int(state["lost_to_faults"])
+    orch.recovery_time_total = float(state["recovery_time_total"])
+    orch._seq = int(state["seq"])
+    orch.rng.bit_generator.state = state["rng"]
+    orch.jrng = jnp.asarray(state["jrng"], jnp.uint32)
+    orch.selection.rng.bit_generator.state = state["selection_rng"]
+    orch.fault_injector.set_state(state["fault"])
+    for g, s in zip(orch.fed_data._rngs, state["data_rngs"]):
+        g.bit_generator.state = s
+
+    def mk_upd(meta):
+        upd = PendingUpdate(**{f: meta[f] for f in _UPD_FIELDS})
+        if meta["has_delta"]:
+            upd.delta = deltas[upd.seq]
+        return upd
+
+    orch._events = [(e["time"], e["seq"], mk_upd(e)) for e in state["events"]]
+    heapq.heapify(orch._events)
+    orch._buffer = [(mk_upd(b), b["arrival"]) for b in state["buffer"]]
+    orch._inflight = set(state["inflight"])
+    orch._buffer_bytes = int(state["buffer_bytes"])
+    orch.logs = [CommitLog(**l) for l in state["logs"]]
+    orch.comm.records = [TransferRecord(**r) for r in state["comm"]]
+    orch.events_processed = [tuple(e) for e in state["events_processed"]]
+    hist = {h["cid"]: h for h in state["fleet"]}
+    for c in orch.fleet:
+        h = hist[c.cid]
+        c.completions = int(h["completions"])
+        c.failures = int(h["failures"])
+        c.ema_round_time = float(h["ema_round_time"])
+        c.last_selected_round = int(h["last_selected_round"])
+
+
+class AsyncCheckpointManager(CheckpointManager):
+    """CheckpointManager grown to cover the async orchestrator's full state.
+
+    ``save``/``restore`` (params + server state + meta) keep working for the
+    sync path; ``save_async``/``restore_async`` additionally round-trip the
+    event heap, pending-update buffer and every RNG stream."""
+
+    def save_async(self, orch, params, server_state):
+        step_dir = self.step_dir(orch.version)
+        save_pytree(step_dir / "params.bin", params)
+        if server_state is not None:
+            save_pytree(step_dir / "server_state.bin", server_state)
+        state, deltas = async_state_dict(orch)
+        for seq, delta in deltas.items():
+            save_pytree(step_dir / f"delta_{seq:06d}.bin", delta)
+        _atomic_write(step_dir / "async_state.json",
+                      json.dumps(state).encode())
+        _atomic_write(step_dir / "meta.json",
+                      json.dumps({"round": orch.version, "mode": "async",
+                                  "clock": orch.clock}).encode())
+        self._finalize(step_dir)
+
+    def restore_async(self, orch, params_like, rnd: int | None = None):
+        """Load the latest (or ``rnd``-th) snapshot INTO ``orch``.
+
+        ``orch`` must be freshly constructed with the same configuration as
+        the writer.  Returns ``(params, server_state)`` ready for
+        ``orch.run(params, N, server_state=server_state)``."""
+        rnd = rnd if rnd is not None else self.latest_round()
+        if rnd is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        step_dir = self.step_dir(rnd)
+        params = load_pytree(step_dir / "params.bin", params_like)
+        server_state = orch.init_server_state(params)
+        ss_path = step_dir / "server_state.bin"
+        if ss_path.exists():
+            server_state = load_pytree(ss_path, server_state)
+        state = json.loads((step_dir / "async_state.json").read_text())
+        seqs = [e["seq"] for e in state["events"] + state["buffer"]
+                if e["has_delta"]]
+        deltas = {seq: load_pytree(step_dir / f"delta_{seq:06d}.bin",
+                                   params_like)
+                  for seq in seqs}
+        load_async_state(orch, state, deltas)
+        return params, server_state

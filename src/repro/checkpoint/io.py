@@ -10,9 +10,6 @@ import os
 import tempfile
 from pathlib import Path
 
-import jax
-import numpy as np
-
 from repro.comm.payload import deserialize_tree, serialize_tree
 
 
@@ -44,16 +41,24 @@ class CheckpointManager:
         self.keep = keep
         self.dir.mkdir(parents=True, exist_ok=True)
 
+    def step_dir(self, rnd: int) -> Path:
+        return self.dir / f"round_{rnd:06d}"
+
+    def _finalize(self, step_dir: Path):
+        _atomic_write(self.dir / "LATEST", step_dir.name.encode())
+        self._gc()
+
     def save(self, rnd: int, params, server_state=None, meta: dict | None = None):
-        step_dir = self.dir / f"round_{rnd:06d}"
+        step_dir = self.step_dir(rnd)
         save_pytree(step_dir / "params.bin", params)
-        if server_state is not None and jax.tree.leaves(server_state):
+        # save whenever a server state was handed in, even a leaf-less pytree
+        # like fedavg's () — "empty state" and "no state" must restore
+        # differently (meta/round still matter for resume either way)
+        if server_state is not None:
             save_pytree(step_dir / "server_state.bin", server_state)
         _atomic_write(step_dir / "meta.json",
                       json.dumps({"round": rnd, **(meta or {})}).encode())
-        _atomic_write(self.dir / "LATEST",
-                      step_dir.name.encode())
-        self._gc()
+        self._finalize(step_dir)
 
     def _gc(self):
         steps = sorted(d for d in self.dir.iterdir()
@@ -74,7 +79,7 @@ class CheckpointManager:
         rnd = rnd if rnd is not None else self.latest_round()
         if rnd is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        step_dir = self.dir / f"round_{rnd:06d}"
+        step_dir = self.step_dir(rnd)
         params = load_pytree(step_dir / "params.bin", params_like)
         server_state = None
         ss_path = step_dir / "server_state.bin"

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import AsyncCheckpointManager, CheckpointManager
 from repro.configs import get_config
 from repro.core import AsyncConfig, CompressionConfig, FLConfig
 from repro.data import (FederatedDataset, cifar10_like, medmnist_like,
@@ -106,12 +106,24 @@ def main():
     ap.add_argument("--fastest-k", type=int, default=0)
     ap.add_argument("--deadline-s", type=float, default=0.0)
     ap.add_argument("--dropout-prob", type=float, default=0.0)
+    ap.add_argument("--spot-preempt-prob", type=float, default=0.0)
+    ap.add_argument("--partition-prob", type=float, default=0.0)
+    ap.add_argument("--recovery-policy", default="restart",
+                    choices=["restart", "resume", "discard"],
+                    help="async: what a preempted/partitioned client does "
+                         "with its interrupted attempt (paper §5.4)")
+    ap.add_argument("--recovery-overhead-s", type=float, default=0.0)
     ap.add_argument("--server-opt", default="fedavg",
                     choices=["fedavg", "fedadam", "fedyogi"])
     ap.add_argument("--selection", default="adaptive",
                     choices=["adaptive", "random"])
     ap.add_argument("--checkpoint-dir", default="")
-    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="sync: rounds between snapshots; async: commits")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in "
+                         "--checkpoint-dir (async resumes bit-identically: "
+                         "event heap, buffer and RNG streams are restored)")
     ap.add_argument("--render-jobs", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -133,16 +145,20 @@ def main():
     if args.render_jobs:
         n = render_jobs(fleet, Path(args.render_jobs))
         print(f"rendered {n} scheduler artifacts -> {args.render_jobs}")
+    faults = FaultConfig(dropout_prob=args.dropout_prob,
+                         spot_preempt_prob=args.spot_preempt_prob,
+                         partition_prob=args.partition_prob,
+                         recovery_policy=args.recovery_policy,
+                         recovery_overhead_s=args.recovery_overhead_s)
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
     if args.mode == "async":
-        if args.checkpoint_dir:
-            raise SystemExit(
-                "--checkpoint-dir is not supported with --mode async yet "
-                "(in-flight buffer + event heap need serialising; ROADMAP "
-                "open item)")
         if args.deadline_s or args.fastest_k:
             print("warning: --deadline-s/--fastest-k are barrier-round "
                   "mitigations; the async regime ignores them (staleness "
                   "discounting replaces them)")
+        mgr = (AsyncCheckpointManager(args.checkpoint_dir)
+               if args.checkpoint_dir else None)
         orch = AsyncOrchestrator(
             fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
             async_cfg=AsyncConfig(buffer_size=args.buffer_k,
@@ -151,37 +167,55 @@ def main():
                                   commit_timeout_s=args.commit_timeout,
                                   max_concurrency=args.max_concurrency),
             server_opt_name=args.server_opt, selection_name=args.selection,
-            straggler=StragglerPolicy(),
-            faults=FaultConfig(dropout_prob=args.dropout_prob),
+            straggler=StragglerPolicy(), faults=faults,
             batch_size=args.batch_size, flops_per_client_round=3e12,
-            eval_fn=eval_fn, eval_every=10, seed=args.seed)
-        params, _ = orch.run(params, args.rounds, verbose=True)
+            eval_fn=eval_fn, eval_every=10, checkpoint_mgr=mgr,
+            checkpoint_every=args.checkpoint_every, seed=args.seed)
+        server_state = None
+        if args.resume and mgr.latest_round() is not None:
+            params, server_state = mgr.restore_async(orch, params)
+            print(f"resumed async run at commit {orch.version} "
+                  f"(sim t={orch.clock:.1f}s, {len(orch._inflight)} clients "
+                  f"in flight, {len(orch._buffer)} updates buffered)")
+        params, _ = orch.run(params, args.rounds, server_state=server_state,
+                             verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "async",
             "commits": orch.version,
             "updates_applied": orch.updates_applied,
             "dropped_stale": orch.dropped_stale,
+            "recovered_updates": orch.recovered_updates,
+            "lost_to_faults": orch.lost_to_faults,
             "final_eval": orch.logs[-1].eval_metric if orch.logs else None,
             "virtual_time_s": orch.clock,
             "updates_per_sim_s": orch.updates_per_sim_second,
         }
     else:
+        mgr = (CheckpointManager(args.checkpoint_dir)
+               if args.checkpoint_dir else None)
         orch = Orchestrator(
             fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
             server_opt_name=args.server_opt, selection_name=args.selection,
             straggler=StragglerPolicy(deadline_s=args.deadline_s,
                                       fastest_k=args.fastest_k),
-            faults=FaultConfig(dropout_prob=args.dropout_prob),
+            faults=faults,
             batch_size=args.batch_size, flops_per_client_round=3e12,
-            eval_fn=eval_fn, eval_every=10,
-            checkpoint_mgr=CheckpointManager(args.checkpoint_dir)
-            if args.checkpoint_dir else None,
+            eval_fn=eval_fn, eval_every=10, checkpoint_mgr=mgr,
             checkpoint_every=args.checkpoint_every, seed=args.seed)
-        params, _ = orch.run(params, args.rounds, verbose=True)
+        server_state, start_round = None, 0
+        if args.resume and mgr.latest_round() is not None:
+            server_state = orch.init_server_state(params)
+            params, server_state, meta = mgr.restore(params, server_state)
+            start_round = meta["round"] + 1
+            orch.virtual_clock = meta.get("clock", 0.0)
+            print(f"resumed sync run at round {start_round} "
+                  f"(sim t={orch.virtual_clock:.1f}s)")
+        params, _ = orch.run(params, args.rounds, server_state=server_state,
+                             start_round=start_round, verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "sync",
             "rounds": args.rounds,
-            "final_eval": orch.logs[-1].eval_metric,
+            "final_eval": orch.logs[-1].eval_metric if orch.logs else None,
             "virtual_time_s": orch.virtual_clock,
             "mean_bytes_per_client_round":
                 orch.comm.mean_bytes_per_client_round(),

@@ -31,7 +31,8 @@ from repro.core.async_round import (AsyncConfig, build_buffer_commit_step,
 from repro.core.compression import payload_bytes
 from repro.core.round import FLConfig
 from repro.optim import get_client_optimizer, get_server_optimizer
-from repro.orchestrator.fault import FaultConfig, FaultInjector
+from repro.orchestrator.fault import (RECOVERABLE_FAULTS, FaultConfig,
+                                      FaultInjector)
 from repro.orchestrator.selection import get_selection
 from repro.orchestrator.straggler import StragglerPolicy, simulate_round_times
 
@@ -44,11 +45,15 @@ class PendingUpdate:
     client_idx: int             # index into the fleet list
     dispatch_version: int       # server commit counter at dispatch
     dispatch_time: float
-    duration_s: float
+    duration_s: float           # fault-free attempt duration (recovery base)
     delta: object = None        # pytree (None if the client faulted)
     loss: float = float("nan")
     weight: float = 1.0
     failed: bool = False
+    fault: str = ""             # dropout | preempt | partition ("" = none)
+    steps_done: int = 0         # local steps checkpointed before the fault
+    retries: int = 0            # recovery attempts consumed so far
+    recovery_s: float = 0.0     # arrival delay vs. the fault-free attempt
 
 
 @dataclass
@@ -63,6 +68,8 @@ class CommitLog:
     bytes_up: int
     timeout_commit: bool = False
     eval_metric: float = float("nan")
+    n_recovered: int = 0               # committed updates that survived a fault
+    recovery_time_s: float = 0.0       # mean extra latency those updates paid
 
 
 @dataclass
@@ -82,6 +89,8 @@ class AsyncOrchestrator:
     flops_per_client_round: float = 1e12
     eval_fn: Optional[Callable] = None     # (params) -> float metric
     eval_every: int = 10                   # in commits
+    checkpoint_mgr: object = None          # AsyncCheckpointManager (or None)
+    checkpoint_every: int = 0              # in commits (0 = only at run end)
     seed: int = 0
 
     def __post_init__(self):
@@ -109,11 +118,17 @@ class AsyncOrchestrator:
         self.version = 0              # server commit counter
         self.updates_applied = 0      # accepted client updates committed
         self.dropped_stale = 0
+        self.recovered_updates = 0    # updates that arrived after >=1 fault
+        self.lost_to_faults = 0       # attempts abandoned (no recovery)
+        self.recovery_time_total = 0.0
         self._seq = 0
         self._events: list = []       # heap of (arrival_time, seq, PendingUpdate)
         self._inflight: set[int] = set()   # cids currently training
         self._buffer: list[tuple] = []     # [(PendingUpdate, arrival_time)]
         self._buffer_bytes = 0
+        # processed-event trace: (t, seq, cid, failed, fault) per heap pop —
+        # what the resume-equivalence tests pin event ordering against
+        self.events_processed: list[tuple] = []
 
     # ------------------------------------------------------------------
     def init_server_state(self, params):
@@ -125,6 +140,18 @@ class AsyncOrchestrator:
         return self._pb
 
     # ------------------------------------------------------------- dispatch
+    def _train_client(self, upd: PendingUpdate, client, params):
+        """Run the client's local training against the given params snapshot."""
+        batches = self.fed_data.sample_round([client.cid],
+                                             self.fl.local_steps,
+                                             self.batch_size)
+        batches = jax.tree.map(lambda x: jnp.asarray(x[0]), batches)
+        self.jrng, r = jax.random.split(self.jrng)
+        delta, loss = self._client_update(params, batches, r)
+        upd.delta = delta
+        upd.loss = float(loss)
+        upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
+
     def _dispatch_one(self, params, now: float):
         """Hand the current params to one idle client; schedule its arrival."""
         avail = [c for c in self.fleet if c.cid not in self._inflight]
@@ -140,31 +167,78 @@ class AsyncOrchestrator:
             self.straggler)[0])
         # the injector's round clock advances per COMMIT (the async analogue
         # of a round, in _do_commit) so FaultConfig partition probabilities /
-        # durations keep their sync-round units; only the survival dice roll
-        # happens per dispatch
-        failed = bool(self.fault_injector.survive_mask([client])[0] == 0)
+        # durations keep their sync-round units; the fault dice — cause and
+        # strike time included — roll per dispatch
+        failed, fault, frac = self.fault_injector.draw_fault(client)
 
         upd = PendingUpdate(seq=self._seq, cid=client.cid,
                             client_idx=client_idx,
                             dispatch_version=self.version,
-                            dispatch_time=now, duration_s=dur, failed=failed)
-        if not failed:
+                            dispatch_time=now, duration_s=dur, failed=failed,
+                            fault=fault)
+        arrival = now + dur
+        if failed:
+            # the fault strikes at frac of the attempt: the event stream sees
+            # the failure WHEN it happens, not after a phantom full attempt
+            arrival = now + frac * dur
+            upd.steps_done = int(frac * self.fl.local_steps)
+        if (not failed) or (fault in RECOVERABLE_FAULTS
+                            and self.faults.recovery_policy == "resume"):
             # the client trains against the params snapshot it is handed NOW;
-            # staleness accrues from commits landing while it runs.
-            batches = self.fed_data.sample_round([client.cid],
-                                                 self.fl.local_steps,
-                                                 self.batch_size)
-            batches = jax.tree.map(lambda x: jnp.asarray(x[0]), batches)
-            self.jrng, r = jax.random.split(self.jrng)
-            delta, loss = self._client_update(params, batches, r)
-            upd.delta = delta
-            upd.loss = float(loss)
-            upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
+            # staleness accrues from commits landing while it runs.  Under
+            # the resume policy a preempted/partitioned client keeps a local
+            # step checkpoint, so its delta (still vs. this snapshot) is
+            # computed up front and survives the fault.
+            self._train_client(upd, client, params)
         link = link_for_site(client.site)
         self.comm.log(self.version, client.cid, "down", upd_bytes, link)
         self._inflight.add(client.cid)
-        heapq.heappush(self._events, (now + dur, self._seq, upd))
+        heapq.heappush(self._events, (arrival, self._seq, upd))
         self._seq += 1
+        return True
+
+    # ------------------------------------------------------------- recovery
+    def _handle_fault_arrival(self, upd: PendingUpdate, t: float, params):
+        """A fault just struck ``upd``'s client at sim-time ``t``.
+
+        Returns True when a recovery attempt was scheduled (the slot stays
+        busy); False when the attempt's work is lost and the slot frees."""
+        client = self.fleet[upd.client_idx]
+        policy = self.faults.recovery_policy
+        if (upd.fault not in RECOVERABLE_FAULTS or policy == "discard"
+                or upd.retries >= self.faults.max_retries):
+            return False
+        L = max(self.fl.local_steps, 1)
+        if policy == "restart":
+            # retry from scratch against the CURRENT global params: fresh
+            # downlink, fresh batches, staleness resets to the live version
+            upd.steps_done = 0
+            upd_bytes = self._payload_bytes_cache(params)
+            attempt = float(simulate_round_times(
+                [client], self.flops_per_client_round, upd_bytes, self.rng,
+                self.straggler)[0])
+            # duration_s is the recovery baseline: the fault-free duration of
+            # the attempt that will actually land.  The retry redraws its
+            # contention noise, so rebase — otherwise a lucky short retry
+            # yields a NEGATIVE recovery time against the first attempt's draw
+            upd.duration_s = attempt
+            self._train_client(upd, client, params)
+            upd.dispatch_version = self.version
+            self.comm.log(self.version, client.cid, "down", upd_bytes,
+                          link_for_site(client.site))
+        else:  # resume: re-run only the steps after the local checkpoint
+            attempt = upd.duration_s * (L - upd.steps_done) / L
+        start = t + self.faults.recovery_overhead_s
+        failed, fault, frac = self.fault_injector.draw_fault(client)
+        upd.retries += 1
+        if failed and attempt > 0:
+            upd.failed, upd.fault = True, fault
+            if policy == "resume":
+                upd.steps_done += int(frac * (L - upd.steps_done))
+            heapq.heappush(self._events, (start + frac * attempt, upd.seq, upd))
+        else:
+            upd.failed, upd.fault = False, ""
+            heapq.heappush(self._events, (start + attempt, upd.seq, upd))
         return True
 
     # --------------------------------------------------------------- commit
@@ -196,13 +270,16 @@ class AsyncOrchestrator:
         self.fault_injector.step_round()
         self.updates_applied += len(ups)
         losses = [u.loss for u in ups if np.isfinite(u.loss)]
+        rec = [u.recovery_s for u in ups if u.retries]
         log = CommitLog(
             commit=self.version, sim_time=at_time, n_updates=len(ups),
             mean_staleness=float(np.mean(stal)) if stal else 0.0,
             max_staleness=int(max(stal)) if stal else 0,
             client_loss=float(np.mean(losses)) if losses else float("nan"),
             delta_norm=float(metrics["delta_norm"]),
-            bytes_up=self._buffer_bytes, timeout_commit=timeout)
+            bytes_up=self._buffer_bytes, timeout_commit=timeout,
+            n_recovered=len(rec),
+            recovery_time_s=float(np.mean(rec)) if rec else 0.0)
         if self.eval_fn and (self.version % self.eval_every == 0):
             log.eval_metric = float(self.eval_fn(params))
         self.logs.append(log)
@@ -227,17 +304,26 @@ class AsyncOrchestrator:
         return params, server_state
 
     # ------------------------------------------------------------------ run
+    def save_checkpoint(self, params, server_state):
+        """Snapshot the FULL orchestrator state through the checkpoint
+        manager; a fresh orchestrator restored from it replays the exact
+        trajectory an uninterrupted run would have taken."""
+        if self.checkpoint_mgr is None:
+            raise ValueError("no checkpoint_mgr configured")
+        self.checkpoint_mgr.save_async(self, params, server_state)
+
     def run(self, params, num_commits: int, server_state=None,
             max_sim_time: float = 0.0, verbose: bool = False):
         """Run until `num_commits` server commits (or `max_sim_time`)."""
         if server_state is None:
             server_state = self.init_server_state(params)
-        # top up to the concurrency cap; a continuation run may already have
-        # clients in flight (their events were pushed back at the budget cut)
+        # top up to the concurrency cap; a continuation or restored run may
+        # already have clients in flight (their events live in the heap)
         target = min(self.async_cfg.max_concurrency, len(self.fleet))
         for _ in range(max(0, target - len(self._inflight))):
             self._dispatch_one(params, self.clock)
 
+        last_ckpt = self.version
         while self._events and self.version < num_commits:
             t, seq, upd = heapq.heappop(self._events)
             if max_sim_time and t > max_sim_time:
@@ -255,11 +341,24 @@ class AsyncOrchestrator:
                 heapq.heappush(self._events, (t, seq, upd))
                 break
             self.clock = max(self.clock, t)
-            self._inflight.discard(upd.cid)
             client = self.fleet[upd.client_idx]
-            # history in dispatch-counter units, matching what select() sees
-            client.record(not upd.failed, upd.duration_s, self._seq)
-            if not upd.failed:
+            self.events_processed.append(
+                (round(t, 9), upd.seq, upd.cid, bool(upd.failed), upd.fault))
+            if upd.failed:
+                if self._handle_fault_arrival(upd, t, params):
+                    continue            # slot stays busy with the retry
+                self.lost_to_faults += 1
+                self._inflight.discard(upd.cid)
+                # history in dispatch-counter units, matching select()'s view
+                client.record(False, t - upd.dispatch_time, self._seq)
+            else:
+                self._inflight.discard(upd.cid)
+                elapsed = t - upd.dispatch_time
+                client.record(True, elapsed, self._seq)
+                if upd.retries:
+                    upd.recovery_s = elapsed - upd.duration_s
+                    self.recovered_updates += 1
+                    self.recovery_time_total += upd.recovery_s
                 # the client transmitted regardless of what the server does
                 # with the update — dropped-as-stale still paid the uplink
                 upd_bytes = self._payload_bytes_cache(params)
@@ -280,6 +379,19 @@ class AsyncOrchestrator:
                           f"stale={lg.mean_staleness:.1f} "
                           f"eval={lg.eval_metric:.4f}")
             self._dispatch_one(params, self.clock)
+            # checkpoint only here, at the loop-top-equivalent safe point:
+            # the popped event is fully processed and its freed slot
+            # re-dispatched, so restore + continue == never stopped
+            if (self.checkpoint_mgr and self.checkpoint_every
+                    and self.version != last_ckpt
+                    and self.version % self.checkpoint_every == 0):
+                self.save_checkpoint(params, server_state)
+                last_ckpt = self.version
+        if self.checkpoint_mgr is not None:
+            # terminal snapshot (kill-by-budget / commit target reached) —
+            # taken BEFORE the eval backfill below, which is presentation
+            # only and must not leak into the resumed trajectory
+            self.save_checkpoint(params, server_state)
         # sync run() forces an eval on the final round; mirror that so the
         # terminal commit always carries a real metric
         if self.eval_fn and self.logs and not np.isfinite(

@@ -1,9 +1,26 @@
 """Fault injection (paper §5.3/§5.4: dropouts, spot preemption, partitions).
 
-Faults zero a client's mask entry for the round; the round step's
-mask-normalised aggregation (partial aggregation) makes the system tolerate
-them — the property Table "Straggler Resilience" measures (20% dropout ->
-<1.8% accuracy loss)."""
+Synchronous path: faults zero a client's mask entry for the round; the round
+step's mask-normalised aggregation (partial aggregation) makes the system
+tolerate them — the property Table "Straggler Resilience" measures (20%
+dropout -> <1.8% accuracy loss).
+
+Asynchronous path: faults are *typed events with a strike time*.
+``draw_fault`` attributes each failure to a cause — plain ``dropout``
+(client gone for the attempt), ``preempt`` (spot instance reclaimed
+mid-training) or ``partition`` (whole site unreachable) — plus the fraction
+of the attempt completed when the fault strikes.  Transient infrastructure
+faults (preempt/partition) are recoverable under ``recovery_policy``:
+
+  restart — the client retries the assignment from local step 0 against the
+            CURRENT global params (fresh downlink, staleness resets),
+  resume  — the client checkpointed locally at its last completed local step
+            and re-enqueues with only the remaining work (paper §5.4
+            partial-progress recovery; staleness keeps accruing from the
+            original dispatch),
+  discard — the attempt's work is lost and the slot is freed (the pre-PR-3
+            behaviour).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -12,6 +29,9 @@ import numpy as np
 
 from repro.orchestrator.registry import ClientInfo
 
+RECOVERABLE_FAULTS = ("preempt", "partition")
+RECOVERY_POLICIES = ("restart", "resume", "discard")
+
 
 @dataclass
 class FaultConfig:
@@ -19,6 +39,18 @@ class FaultConfig:
     spot_preempt_prob: float = 0.0  # extra dropout for spot instances
     partition_prob: float = 0.0     # whole-site network partition
     partition_len: int = 2          # rounds a partition lasts
+    recovery_policy: str = "restart"   # restart | resume | discard (async)
+    recovery_overhead_s: float = 0.0   # restart/reschedule delay per retry
+    max_retries: int = 2               # recovery attempts before giving up
+
+    def __post_init__(self):
+        if self.recovery_policy not in RECOVERY_POLICIES:
+            raise ValueError(
+                f"recovery_policy must be one of {RECOVERY_POLICIES}, got "
+                f"{self.recovery_policy!r}")
+        if self.max_retries < 0 or self.recovery_overhead_s < 0:
+            raise ValueError("max_retries and recovery_overhead_s must be "
+                             "non-negative")
 
 
 class FaultInjector:
@@ -28,6 +60,17 @@ class FaultInjector:
         self._partitioned_site: str | None = None
         self._partition_left = 0
 
+    # ------------------------------------------------- checkpointable state
+    def state(self) -> dict:
+        return {"rng": self.rng.bit_generator.state,
+                "partitioned_site": self._partitioned_site,
+                "partition_left": self._partition_left}
+
+    def set_state(self, s: dict):
+        self.rng.bit_generator.state = s["rng"]
+        self._partitioned_site = s["partitioned_site"]
+        self._partition_left = int(s["partition_left"])
+
     def step_round(self):
         if self._partition_left > 0:
             self._partition_left -= 1
@@ -36,6 +79,24 @@ class FaultInjector:
         elif self.cfg.partition_prob and self.rng.random() < self.cfg.partition_prob:
             self._partitioned_site = "cloud" if self.rng.random() < 0.5 else "hpc"
             self._partition_left = self.cfg.partition_len
+
+    def draw_fault(self, c: ClientInfo) -> tuple[bool, str, float]:
+        """One attempt's fate: ``(failed, kind, frac_completed_at_strike)``.
+
+        Same total failure probability as one ``survive_mask`` entry —
+        dropout folds in (1 - reliability), spot instances additionally risk
+        preemption — but the cause is attributed and a strike time drawn so
+        the async event stream reflects WHEN the fault lands, not just that
+        the attempt was doomed at dispatch."""
+        if self._partitioned_site and c.site == self._partitioned_site:
+            return True, "partition", float(self.rng.uniform(0.05, 0.95))
+        p_drop = 1 - (1 - self.cfg.dropout_prob) * c.profile.reliability
+        p_pre = self.cfg.spot_preempt_prob if c.profile.spot else 0.0
+        u = self.rng.random()
+        if u >= 1 - (1 - p_drop) * (1 - p_pre):
+            return False, "", 1.0
+        kind = "preempt" if (p_pre and u < p_pre) else "dropout"
+        return True, kind, float(self.rng.uniform(0.05, 0.95))
 
     def survive_mask(self, clients: list[ClientInfo]) -> np.ndarray:
         mask = np.ones(len(clients))

@@ -138,11 +138,12 @@ class Orchestrator:
         return self._pb
 
     def run(self, params, num_rounds: int, server_state=None,
-            convergence_eps: float = 0.0, verbose: bool = False):
+            convergence_eps: float = 0.0, verbose: bool = False,
+            start_round: int = 0):
         if server_state is None:
             server_state = self.init_server_state(params)
         monitor = ConvergenceMonitor(convergence_eps) if convergence_eps else None
-        for rnd in range(num_rounds):
+        for rnd in range(start_round, num_rounds):
             params, server_state, log = self.run_round(rnd, params, server_state)
             if self.eval_fn and (rnd % self.eval_every == 0
                                  or rnd == num_rounds - 1):

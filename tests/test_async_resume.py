@@ -1,0 +1,196 @@
+"""Resume-equivalence for the crash-safe async regime: killing an
+AsyncOrchestrator at any point and restoring from its checkpoint must
+reproduce the uninterrupted run's trajectory — final params (<= 1e-6),
+commit log, processed-event order and comm ledger.
+
+Kill points exercised: right after the FIRST commit, mid-buffer (a
+sim-time budget cut with updates sitting in the un-committed buffer), and
+mid-partition (a whole-site network partition active at snapshot time,
+with partial-progress recovery in flight)."""
+import math
+from dataclasses import asdict
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointManager
+from repro.core import AsyncConfig, FLConfig
+from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
+from repro.models.cnn import CNN, CNNConfig
+from repro.orchestrator import (AsyncOrchestrator, FaultConfig,
+                                StragglerPolicy, make_hybrid_fleet)
+
+CFG = CNNConfig("tiny-cnn", (28, 28, 1), 9, channels=(4, 8), dense=32)
+SEED, N_CLIENTS = 11, 6
+
+# the jit'd steps only depend on (model cfg, FLConfig, K, staleness exponent),
+# all fixed per key here — share them across orchestrator instances so the
+# suite compiles each step once instead of once per run
+_STEP_CACHE: dict = {}
+
+
+def _share_steps(orch):
+    key = (orch.async_cfg.buffer_size, orch.fl.local_steps,
+           orch.async_cfg.staleness_exponent)
+    if key in _STEP_CACHE:
+        orch._client_update, orch._commit_step = _STEP_CACHE[key]
+    else:
+        _STEP_CACHE[key] = (orch._client_update, orch._commit_step)
+
+
+def make_orch(buffer_size=3, commit_timeout=0.0, faults=None, mgr=None,
+              checkpoint_every=0, seed=SEED, local_steps=1, sigma=0.5):
+    data = medmnist_like(n=400, seed=seed)
+    parts = partition_dirichlet(data.y, N_CLIENTS, alpha=0.5, seed=seed)
+    fed = FederatedDataset(data, parts, seed=seed)
+    model = CNN(CFG)
+    params = model.init(jax.random.PRNGKey(seed))
+    fleet = make_hybrid_fleet(N_CLIENTS // 2, N_CLIENTS - N_CLIENTS // 2,
+                              seed=seed, data_sizes=[len(p) for p in parts])
+    orch = AsyncOrchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn,
+        fl=FLConfig(mode="async", num_clients=N_CLIENTS,
+                    local_steps=local_steps, client_lr=0.05),
+        async_cfg=AsyncConfig(buffer_size=buffer_size,
+                              commit_timeout_s=commit_timeout,
+                              max_concurrency=4),
+        straggler=StragglerPolicy(contention_sigma=sigma),
+        faults=faults or FaultConfig(),
+        batch_size=8, flops_per_client_round=2e12,
+        checkpoint_mgr=mgr, checkpoint_every=checkpoint_every, seed=seed)
+    _share_steps(orch)
+    return orch, params
+
+
+def _norm(d):
+    return {k: ("nan" if isinstance(v, float) and math.isnan(v) else v)
+            for k, v in d.items()}
+
+
+def _trajectory(orch):
+    return ([_norm(asdict(l)) for l in orch.logs],
+            list(orch.events_processed),
+            [asdict(r) for r in orch.comm.records])
+
+
+def _assert_same_run(resumed, straight, p_resumed, p_straight):
+    r_logs, r_ev, r_comm = _trajectory(resumed)
+    s_logs, s_ev, s_comm = _trajectory(straight)
+    assert r_logs == s_logs
+    assert r_ev == s_ev
+    assert r_comm == s_comm
+    for a, b in zip(jax.tree.leaves(p_resumed), jax.tree.leaves(p_straight)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6)
+
+
+PARTITION_FAULTS = dict(partition_prob=0.9, partition_len=3,
+                        spot_preempt_prob=0.3, recovery_policy="resume")
+
+
+@pytest.mark.parametrize("kill", ["first_commit", "mid_buffer",
+                                  "mid_partition"])
+def test_kill_and_resume_reproduces_uninterrupted_run(tmp_path, kill):
+    n_commits = 6
+    mk = lambda **kw: make_orch(faults=(FaultConfig(**PARTITION_FAULTS)
+                                        if kill == "mid_partition" else None),
+                                **kw)
+
+    straight, params = mk()
+    p_straight, _ = straight.run(params, n_commits)
+
+    mgr = AsyncCheckpointManager(tmp_path, keep=20)
+    killed, params2 = mk(mgr=mgr, checkpoint_every=1)
+    if kill == "mid_buffer":
+        # cut just before the 3rd commit's triggering arrival: the snapshot
+        # must carry a non-empty pending-update buffer
+        budget = float(np.nextafter(straight.logs[2].sim_time, 0.0))
+        p_k, st_k = killed.run(params2, n_commits, max_sim_time=budget)
+        assert killed._buffer, "kill point failed to land mid-buffer"
+    else:
+        k = 1 if kill == "first_commit" else 2
+        p_k, st_k = killed.run(params2, k)
+        assert killed.version == k
+    if kill == "mid_partition":
+        # the scenario must genuinely snapshot an ACTIVE partition
+        assert killed.fault_injector._partition_left > 0
+        assert any(e[4] == "partition" for e in straight.events_processed)
+
+    resumed, params3 = mk(mgr=mgr)
+    p0, st0 = mgr.restore_async(resumed, params3)
+    assert resumed.version == killed.version
+    p_resumed, _ = resumed.run(p0, n_commits, server_state=st0)
+
+    _assert_same_run(resumed, straight, p_resumed, p_straight)
+
+
+def test_resume_from_every_commit_boundary(tmp_path):
+    """Kill/resume at ANY commit boundary reproduces the final params."""
+    n_commits = 5
+    mgr = AsyncCheckpointManager(tmp_path, keep=20)
+    straight, params = make_orch(mgr=mgr, checkpoint_every=1)
+    p_straight, _ = straight.run(params, n_commits)
+    saved = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir()
+                   if d.is_dir())
+    assert set(range(1, n_commits + 1)) <= set(saved)
+
+    for k in range(1, n_commits):
+        resumed, params2 = make_orch()
+        resumed.checkpoint_mgr = None
+        p0, st0 = mgr.restore_async(resumed, params2, rnd=k)
+        assert resumed.version == k
+        p_resumed, _ = resumed.run(p0, n_commits, server_state=st0)
+        _assert_same_run(resumed, straight, p_resumed, p_straight)
+
+
+def test_resume_with_timeout_commits(tmp_path):
+    """Timeout-flush commits stamp on the T grid; a budget kill that lands
+    between deadlines must still resume to the identical commit log."""
+    n_commits = 5
+    mk = lambda **kw: make_orch(buffer_size=64, commit_timeout=1.0, **kw)
+    straight, params = mk()
+    p_straight, _ = straight.run(params, n_commits)
+    assert any(l.timeout_commit for l in straight.logs)
+
+    mgr = AsyncCheckpointManager(tmp_path, keep=20)
+    killed, params2 = mk(mgr=mgr)
+    budget = (straight.logs[1].sim_time + straight.logs[2].sim_time) / 2
+    killed.run(params2, n_commits, max_sim_time=budget)
+    assert 0 < killed.version < n_commits
+
+    resumed, params3 = mk(mgr=mgr)
+    p0, st0 = mgr.restore_async(resumed, params3)
+    p_resumed, _ = resumed.run(p0, n_commits, server_state=st0)
+    _assert_same_run(resumed, straight, p_resumed, p_straight)
+
+
+def test_restore_rejects_mismatched_config(tmp_path):
+    mgr = AsyncCheckpointManager(tmp_path)
+    orch, params = make_orch()
+    orch.checkpoint_mgr = mgr
+    orch.run(params, 2)
+    other, params2 = make_orch(buffer_size=5)
+    with pytest.raises(ValueError, match="config"):
+        mgr.restore_async(other, params2)
+
+
+def test_train_cli_checkpoint_and_resume(tmp_path, monkeypatch, capsys):
+    """`--mode async --checkpoint-dir ... --resume` end to end: the old
+    SystemExit path is gone and the resumed run continues the commit count."""
+    from repro.launch import train
+
+    argv = ["train", "--mode", "async", "--dataset", "medmnist",
+            "--rounds", "2", "--clients-pool", "6", "--local-steps", "1",
+            "--batch-size", "4", "--buffer-k", "2", "--max-concurrency", "3",
+            "--checkpoint-every", "1",
+            "--checkpoint-dir", str(tmp_path / "ck")]
+    monkeypatch.setattr("sys.argv", argv)
+    train.main()
+    assert (tmp_path / "ck" / "LATEST").exists()
+
+    monkeypatch.setattr("sys.argv", argv + ["--rounds", "4", "--resume"])
+    train.main()
+    out = capsys.readouterr().out
+    assert "resumed async run at commit 2" in out
+    assert '"commits": 4' in out

@@ -72,3 +72,46 @@ def test_checkpoint_resume_cycle(tmp_path):
     p2, s2, meta = mgr.restore(params, sstate)
     np.testing.assert_array_equal(p2["w"], params["w"])
     np.testing.assert_array_equal(s2["m"]["w"], sstate["m"]["w"])
+
+
+def test_serialize_roundtrip_empty_trees():
+    """Leaf-less pytrees survive the wire format: structure in, structure out."""
+    for t in ((), {}, {"a": {}, "b": ()}):
+        back = deserialize_tree(serialize_tree(t), like=t)
+        assert jax.tree.leaves(back) == []
+        assert jax.tree.structure(back) == jax.tree.structure(t)
+
+
+def test_serialize_roundtrip_int_bool_dtypes():
+    t = {"step": np.int64(7) * np.ones((), np.int64),
+         "epoch": np.arange(5, dtype=np.int32),
+         "warm": np.array([True, False, True]),
+         "bits": np.arange(4, dtype=np.uint8),
+         "m": np.zeros((2, 2), np.float32)}
+    back = deserialize_tree(serialize_tree(t), like=t)
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x, y)
+
+
+def test_checkpoint_saves_leafless_server_state(tmp_path):
+    """A fedavg-style () opt state must be saved, not silently skipped —
+    restoring it yields () (state present, empty), never None (no state)."""
+    mgr = CheckpointManager(tmp_path)
+    params = {"w": np.ones(3, np.float32)}
+    mgr.save(4, params, server_state=(), meta={"clock": 2.5})
+    assert (tmp_path / "round_000004" / "server_state.bin").exists()
+    p2, s2, meta = mgr.restore(params, server_state_like=())
+    assert s2 == () and s2 is not None
+    assert meta["round"] == 4 and meta["clock"] == 2.5
+
+
+def test_checkpoint_server_state_int_bool_leaves(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    params = {"w": np.zeros(2, np.float32)}
+    sstate = {"step": np.ones((), np.int64), "done": np.zeros(3, bool)}
+    mgr.save(1, params, sstate)
+    _, s2, _ = mgr.restore(params, sstate)
+    assert s2["step"].dtype == np.int64 and s2["done"].dtype == np.bool_
+    np.testing.assert_array_equal(s2["step"], sstate["step"])
+    np.testing.assert_array_equal(s2["done"], sstate["done"])

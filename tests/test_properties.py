@@ -147,3 +147,83 @@ def test_quantity_skew_covers_all(n, c):
     parts = partition_quantity_skew(n, c)
     allidx = np.concatenate(parts)
     assert len(np.unique(allidx)) == len(allidx) == n
+
+
+# ------------------------------------------------------------ async resume
+# checkpoint -> restore at a random event index is a NO-OP on the final
+# state, for random (K, T, dropout, preempt, recovery_policy) configs
+_ASYNC_CACHE: dict = {}
+
+
+def _mini_async(K, T, dropout, preempt, policy, mgr=None):
+    from repro.core import AsyncConfig, FLConfig
+    from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
+    from repro.models.cnn import CNN, CNNConfig
+    from repro.orchestrator import (AsyncOrchestrator, FaultConfig,
+                                    StragglerPolicy, make_hybrid_fleet)
+    seed, n_clients = 5, 4
+    if "base" not in _ASYNC_CACHE:
+        data = medmnist_like(n=200, seed=seed)
+        parts = partition_dirichlet(data.y, n_clients, alpha=0.5, seed=seed)
+        model = CNN(CNNConfig("prop-cnn", (28, 28, 1), 9, channels=(2, 4),
+                              dense=8))
+        _ASYNC_CACHE["base"] = (data, parts, model,
+                                model.init(jax.random.PRNGKey(seed)))
+    data, parts, model, params = _ASYNC_CACHE["base"]
+    orch = AsyncOrchestrator(
+        fleet=make_hybrid_fleet(2, 2, seed=seed,
+                                data_sizes=[len(p) for p in parts]),
+        fed_data=FederatedDataset(data, parts, seed=seed),
+        loss_fn=model.loss_fn,
+        fl=FLConfig(mode="async", num_clients=n_clients, local_steps=1,
+                    client_lr=0.05),
+        async_cfg=AsyncConfig(buffer_size=K, commit_timeout_s=T,
+                              max_concurrency=3, max_staleness=50),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        faults=FaultConfig(dropout_prob=dropout, spot_preempt_prob=preempt,
+                           recovery_policy=policy),
+        batch_size=4, flops_per_client_round=2e12,
+        checkpoint_mgr=mgr, seed=seed)
+    # the jit'd steps depend only on (model cfg, FLConfig, K) — share them
+    # across examples so each K compiles once
+    if K in _ASYNC_CACHE:
+        orch._client_update, orch._commit_step = _ASYNC_CACHE[K]
+    else:
+        _ASYNC_CACHE[K] = (orch._client_update, orch._commit_step)
+    return orch, params
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([0.0, 0.6]),
+       st.sampled_from([0.0, 0.3]), st.sampled_from([0.0, 0.5]),
+       st.sampled_from(["restart", "resume", "discard"]),
+       st.integers(0, 30))
+def test_async_checkpoint_restore_is_noop(K, T, dropout, preempt, policy,
+                                          kill_idx):
+    import tempfile
+    from repro.checkpoint import AsyncCheckpointManager
+
+    n_commits = 3
+    straight, params = _mini_async(K, T, dropout, preempt, policy)
+    p_straight, _ = straight.run(params, n_commits)
+    events = straight.events_processed
+    assert events, "run produced no events"
+    # cut at the (kill_idx mod len)-th processed event's sim-time
+    budget = events[kill_idx % len(events)][0]
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        mgr = AsyncCheckpointManager(ckdir, keep=2)
+        killed, params2 = _mini_async(K, T, dropout, preempt, policy, mgr=mgr)
+        killed.run(params2, n_commits, max_sim_time=budget)
+
+        resumed, params3 = _mini_async(K, T, dropout, preempt, policy)
+        p0, st0 = mgr.restore_async(resumed, params3)
+        p_resumed, _ = resumed.run(p0, n_commits, server_state=st0)
+
+    assert resumed.version == straight.version
+    assert [l.sim_time for l in resumed.logs] \
+        == [l.sim_time for l in straight.logs]
+    assert resumed.events_processed == events
+    for a, b in zip(jax.tree.leaves(p_resumed), jax.tree.leaves(p_straight)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6)
