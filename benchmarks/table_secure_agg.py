@@ -1,0 +1,137 @@
+"""Secure-aggregation overhead: masked vs plain, sync AND async regimes.
+
+Pairwise additive masking (core.secure_agg) hides every individual client
+update from the server — the privacy layer of the paper's §6 — but it is
+not free:
+
+  * **bytes** — masks are dense f32 noise, so quantization/sparsity
+    savings do not survive masking: the uplink reverts to the dense wire
+    size (``masked_payload_bytes``) however aggressive the compression
+    config is.  The downlink (params broadcast) keeps its compression.
+  * **wall-clock** — mask generation is K^2 PRF draws per commit inside
+    the jit'd step, and the fatter uplink stretches the simulated
+    transfer times.
+  * **convergence** — ideally NONE: masks cancel within each round/
+    commit, so masked and plain aggregation are the same math (the
+    <= 1e-5 equality is pinned in tests/test_secure_pipeline.py).  The
+    convergence delta reported here isolates what the byte overhead does
+    to the simulated timeline (compression on => different event order),
+    not any change to the aggregation itself.
+
+    PYTHONPATH=src python benchmarks/table_secure_agg.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset_bundle, save
+from repro.core import AsyncConfig, CompressionConfig, FLConfig
+from repro.orchestrator import (AsyncOrchestrator, Orchestrator,
+                                StragglerPolicy, make_hybrid_fleet)
+
+N_POOL = 12
+PER_ROUND = 6
+BUFFER_K = 4
+SYNC_ROUNDS = 6
+ASYNC_COMMITS = 10
+FLOPS = 2e12
+COMPRESSION = CompressionConfig(quantize_bits=8)   # savings masking destroys
+
+
+def build(seed=0):
+    fed, model, params, loss_fn, eval_fn = dataset_bundle(
+        "medmnist", n_clients=N_POOL, seed=seed)
+    fleet = make_hybrid_fleet(N_POOL // 2, N_POOL - N_POOL // 2, seed=seed,
+                              data_sizes=[fed.client_size(c)
+                                          for c in range(fed.num_clients)])
+    return fed, model, params, loss_fn, eval_fn, fleet
+
+
+def run_sync(secure: bool, seed=0):
+    fed, model, params, loss_fn, eval_fn, fleet = build(seed)
+    orch = Orchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=loss_fn,
+        fl=FLConfig(num_clients=PER_ROUND, local_steps=2, client_lr=0.08,
+                    secure_agg=secure, compression=COMPRESSION),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        batch_size=16, flops_per_client_round=FLOPS,
+        eval_fn=eval_fn, eval_every=2, seed=seed)
+    t0 = time.time()
+    params, _ = orch.run(params, SYNC_ROUNDS)
+    return {
+        "mode": "sync", "secure_agg": secure,
+        "commits": len(orch.logs),
+        "bytes_up_total": int(sum(l.bytes_up for l in orch.logs)),
+        "sim_time_s": orch.virtual_clock,
+        "final_loss": float(orch.logs[-1].client_loss),
+        "final_eval": float(orch.logs[-1].eval_metric),
+        "wall_s": time.time() - t0,
+    }
+
+
+def run_async(secure: bool, seed=0):
+    fed, model, params, loss_fn, eval_fn, fleet = build(seed)
+    orch = AsyncOrchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=loss_fn,
+        fl=FLConfig(mode="async", num_clients=PER_ROUND, local_steps=2,
+                    client_lr=0.08, secure_agg=secure,
+                    compression=COMPRESSION),
+        async_cfg=AsyncConfig(buffer_size=BUFFER_K, staleness_exponent=0.5,
+                              max_staleness=40, max_concurrency=N_POOL),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        batch_size=16, flops_per_client_round=FLOPS,
+        eval_fn=eval_fn, eval_every=5, seed=seed)
+    t0 = time.time()
+    params, _ = orch.run(params, num_commits=ASYNC_COMMITS)
+    finite = [l.eval_metric for l in orch.logs if np.isfinite(l.eval_metric)]
+    return {
+        "mode": "async", "secure_agg": secure,
+        "commits": orch.version,
+        "updates_applied": orch.updates_applied,
+        "bytes_up_total": int(sum(l.bytes_up for l in orch.logs)),
+        "mask_overhead_bytes": int(sum(l.mask_overhead_bytes
+                                       for l in orch.logs)),
+        "sim_time_s": orch.clock,
+        "mean_staleness": float(np.mean([l.mean_staleness
+                                         for l in orch.logs])),
+        "final_loss": float(orch.logs[-1].client_loss),
+        "final_eval": float(finite[-1]) if finite else float("nan"),
+        "wall_s": time.time() - t0,
+    }
+
+
+def main():
+    rows = [run_sync(False), run_sync(True),
+            run_async(False), run_async(True)]
+    table = {}
+    for mode in ("sync", "async"):
+        plain, sec = [r for r in rows if r["mode"] == mode]
+        table[mode] = {
+            "bytes_overhead_x": sec["bytes_up_total"]
+            / max(plain["bytes_up_total"], 1),
+            "sim_time_overhead_x": sec["sim_time_s"]
+            / max(plain["sim_time_s"], 1e-9),
+            "wall_overhead_x": sec["wall_s"] / max(plain["wall_s"], 1e-9),
+            "convergence_delta_loss": sec["final_loss"]
+            - plain["final_loss"],
+            "convergence_delta_eval": sec["final_eval"]
+            - plain["final_eval"],
+        }
+    for r in rows:
+        print(f"table_secure_agg,mode={r['mode']},secure={r['secure_agg']},"
+              f"bytes_up={r['bytes_up_total']},sim_s={r['sim_time_s']:.1f},"
+              f"loss={r['final_loss']:.4f},eval={r['final_eval']:.4f},"
+              f"wall_s={r['wall_s']:.1f}")
+    for mode, t in table.items():
+        print(f"table_secure_agg,{mode}: bytes x{t['bytes_overhead_x']:.2f}, "
+              f"sim-time x{t['sim_time_overhead_x']:.2f}, "
+              f"eval delta {t['convergence_delta_eval']:+.4f}")
+    save("table_secure_agg", {"rows": rows, "overhead": table,
+                              "compression": {"quantize_bits": 8}})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -72,8 +72,16 @@ def async_state_dict(orch) -> tuple[dict, dict]:
     state = {
         "config": {"buffer_size": orch.async_cfg.buffer_size,
                    "local_steps": orch.fl.local_steps,
-                   "n_fleet": len(orch.fleet)},
+                   "n_fleet": len(orch.fleet),
+                   "secure_agg": orch.fl.secure_agg,
+                   "staleness_exponent":
+                       str(orch.async_cfg.staleness_exponent)},
         "clock": orch.clock,
+        # staleness-discount state: the alpha the NEXT commit will use, plus
+        # the adaptive controller's EMAs (None when the exponent is constant)
+        "alpha": orch._alpha,
+        "staleness_ctrl": (orch._staleness_ctrl.state()
+                           if orch._staleness_ctrl is not None else None),
         "version": orch.version,
         "updates_applied": orch.updates_applied,
         "dropped_stale": orch.dropped_stale,
@@ -108,13 +116,22 @@ def load_async_state(orch, state: dict, deltas: dict):
     from repro.orchestrator.async_server import CommitLog, PendingUpdate
 
     cfg = state["config"]
+    # .get() defaults keep pre-secure-agg-era checkpoints restorable by a
+    # matching (plain, constant-exponent) orchestrator
     if cfg["buffer_size"] != orch.async_cfg.buffer_size \
             or cfg["local_steps"] != orch.fl.local_steps \
-            or cfg["n_fleet"] != len(orch.fleet):
+            or cfg["n_fleet"] != len(orch.fleet) \
+            or cfg.get("secure_agg", False) != orch.fl.secure_agg \
+            or cfg.get("staleness_exponent",
+                       str(orch.async_cfg.staleness_exponent)) \
+            != str(orch.async_cfg.staleness_exponent):
         raise ValueError(
             f"checkpoint was written by an orchestrator with config {cfg}; "
             f"restore requires an identically configured one")
     orch.clock = float(state["clock"])
+    orch._alpha = float(state.get("alpha", orch.async_cfg.initial_exponent()))
+    if orch._staleness_ctrl is not None and state.get("staleness_ctrl"):
+        orch._staleness_ctrl.set_state(state["staleness_ctrl"])
     orch.version = int(state["version"])
     orch.updates_applied = int(state["updates_applied"])
     orch.dropped_stale = int(state["dropped_stale"])

@@ -1,7 +1,11 @@
 """The paper's primary contribution: the federated round step (Algorithm 1),
 robust aggregation, and communication-efficient compression."""
 from repro.core.round import FLConfig, build_fl_round_step, build_local_train  # noqa: F401
-from repro.core.async_round import (AsyncConfig, build_buffer_commit_step,  # noqa: F401
-                                    build_client_update_step, staleness_weights)
+from repro.core.async_round import (AdaptiveStalenessController, AsyncConfig,  # noqa: F401
+                                    build_buffer_commit_step,
+                                    build_client_update_step,
+                                    staleness_weights)
+from repro.core.pipeline import UpdatePipeline, build_update_pipeline  # noqa: F401
 from repro.core.compression import CompressionConfig, compress_tree, payload_bytes  # noqa: F401
+from repro.core.secure_agg import masked_payload_bytes  # noqa: F401
 from repro.core.convergence import ConvergenceMonitor  # noqa: F401

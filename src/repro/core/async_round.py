@@ -27,19 +27,27 @@ Split of responsibilities (mirrors round.py):
     behaviour is identical to the sync path.
   * ``build_buffer_commit_step``  — the jit'd server step over a FIXED-K
     buffer: ``(params, server_state, deltas[K, ...], weights[K],
-    staleness[K], mask[K], rng) -> (params', state', metrics)``.
+    staleness[K], losses[K], mask[K], ids[K], exponent, rng)
+    -> (params', state', metrics)``.
     Timeout commits with fewer than K live updates pad with zero deltas
-    and mask 0, so one compiled step serves every commit.  Compression is
-    the same straight-through ``compress_tree`` pipeline as the sync
-    round, applied per buffered update (what crosses the wire is the
-    compressed delta).
+    and mask 0, so one compiled step serves every commit.  The whole
+    compress -> weight/discount -> secure_mask -> aggregate -> normalise
+    transform is the SAME ``repro.core.pipeline`` stage stack the three
+    sync execution modes consume — there is no async-only aggregation
+    math left here.  ``ids`` carries UNIQUE per-commit slot indices for
+    commit-keyed pairwise masking under ``FLConfig.secure_agg`` (slot
+    indices, not cids: a client with two updates in one buffer is two
+    logical participants); ``exponent`` is the staleness discount's
+    ``a``, a runtime scalar so the adaptive controller below can move it
+    between commits without recompiling.
   * Event ordering, buffer policy, staleness bookkeeping and comm
     accounting are HOST-side — repro.orchestrator.async_server.
 
 Equivalence invariant (tested): with staleness forced to zero, a full
 mask, and compression off, one buffer commit over the C deltas of a sync
 round reproduces the sync round step's new params to <= 1e-5 — async is a
-strict generalisation, not a different algorithm.
+strict generalisation, not a different algorithm.  The same holds with
+``secure_agg`` on in both regimes (masks cancel within the commit).
 
 Limits encoded here rather than left to callers:
   * ``max_staleness`` — updates older than this are dropped by the
@@ -51,13 +59,14 @@ Limits encoded here rather than left to callers:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Union
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation as agg
-from repro.core.compression import compress_tree
+from repro.core.pipeline import build_update_pipeline, staleness_weights  # noqa: F401  (re-export)
 from repro.core.round import FLConfig, build_local_train, global_norm
 from repro.optim import Optimizer, ServerOptimizer
 
@@ -66,7 +75,10 @@ from repro.optim import Optimizer, ServerOptimizer
 class AsyncConfig:
     """Policy knobs of the buffered-asynchronous execution regime."""
     buffer_size: int = 8            # K: commit every K buffered updates
-    staleness_exponent: float = 0.5  # a in 1/(1+s)^a  (0 -> no discount)
+    staleness_exponent: Union[float, str] = 0.5  # a in 1/(1+s)^a (0 -> no
+    #                                 discount), or "adaptive": FedAsync-style
+    #                                 online alpha from the observed staleness
+    #                                 distribution (AdaptiveStalenessController)
     max_staleness: int = 20         # drop updates staler than this
     commit_timeout_s: float = 0.0   # T: commit a partial buffer once its
     #                                 oldest update has waited T sim-seconds
@@ -79,19 +91,91 @@ class AsyncConfig:
         if self.max_concurrency < 1:
             raise ValueError(
                 f"max_concurrency must be >= 1, got {self.max_concurrency}")
-        if self.max_staleness < 0 or self.staleness_exponent < 0 \
-                or self.commit_timeout_s < 0:
-            raise ValueError("max_staleness, staleness_exponent and "
-                             "commit_timeout_s must be non-negative")
+        if isinstance(self.staleness_exponent, str):
+            if self.staleness_exponent != "adaptive":
+                raise ValueError(
+                    f"staleness_exponent must be a non-negative float or "
+                    f"'adaptive', got {self.staleness_exponent!r}")
+        elif self.staleness_exponent < 0:
+            raise ValueError("staleness_exponent must be non-negative")
+        if self.max_staleness < 0 or self.commit_timeout_s < 0:
+            raise ValueError("max_staleness and commit_timeout_s must be "
+                             "non-negative")
+
+    @property
+    def adaptive_staleness(self) -> bool:
+        return self.staleness_exponent == "adaptive"
+
+    def initial_exponent(self) -> float:
+        return (AdaptiveStalenessController().alpha
+                if self.adaptive_staleness else float(self.staleness_exponent))
 
 
-def staleness_weights(staleness, exponent: float):
-    """The FedBuff polynomial discount ``1 / (1 + s)^a``.
+class AdaptiveStalenessController:
+    """Online FedAsync-style staleness exponent (host-side, deterministic).
 
-    ``staleness`` counts server commits between a client's dispatch and its
-    update's arrival; works on jnp or np arrays (used as its own NumPy
-    reference in tests)."""
-    return (1.0 + staleness) ** (-exponent)
+    Rule: pick ``a`` so the polynomial discount at the OBSERVED tail
+    staleness (EMA of the per-commit p90) equals ``w_floor``:
+
+        a = ln(1/w_floor) / ln(1 + s_p90)
+
+    A fleet whose updates arrive barely stale gets a sharp exponent (stale
+    stragglers are outliers — discount them hard); a fleet where high
+    staleness is the NORM gets a gentle one, so slow sites keep
+    contributing instead of being starved (FedAsync's adaptive-alpha
+    motivation).  A delta-norm drift brake tightens the discount whenever
+    the committed step norm drifts above its EMA (divergence pressure —
+    stale gradients amplifying the server step).
+
+    The controller is pure host-side state: ``alpha`` is fed to the jit'd
+    commit step as a runtime scalar, and ``state()``/``set_state()`` make
+    it checkpointable so kill/--resume replays identical exponents.
+    """
+
+    def __init__(self, w_floor: float = 0.1, alpha0: float = 0.5,
+                 alpha_min: float = 0.05, alpha_max: float = 4.0,
+                 ema: float = 0.8, drift_gain: float = 1.0):
+        self.w_floor = w_floor
+        self.alpha = alpha0
+        self.alpha_min, self.alpha_max = alpha_min, alpha_max
+        self.ema = ema
+        self.drift_gain = drift_gain
+        self._stale_p90 = 0.0
+        self._norm_ema = None
+
+    def update(self, staleness, delta_norm: float) -> float:
+        """Feed one commit's observed staleness values + committed delta
+        norm; returns the alpha for the NEXT commit."""
+        if len(staleness):
+            p90 = float(np.quantile(np.asarray(staleness, np.float64), 0.9))
+            self._stale_p90 = (self.ema * self._stale_p90
+                               + (1.0 - self.ema) * p90)
+        if self._stale_p90 > 0:
+            base = np.log(1.0 / self.w_floor) / np.log1p(self._stale_p90)
+        else:
+            base = self.alpha_max     # nothing is stale: discount is inert
+        drift = 0.0
+        if delta_norm == delta_norm:  # skip NaN (empty commits)
+            if self._norm_ema is None:
+                self._norm_ema = float(delta_norm)
+            else:
+                drift = max(0.0, (float(delta_norm) - self._norm_ema)
+                            / (self._norm_ema + 1e-12))
+                self._norm_ema = (self.ema * self._norm_ema
+                                  + (1.0 - self.ema) * float(delta_norm))
+        self.alpha = float(np.clip(base * (1.0 + self.drift_gain * drift),
+                                   self.alpha_min, self.alpha_max))
+        return self.alpha
+
+    def state(self) -> dict:
+        return {"alpha": self.alpha, "stale_p90": self._stale_p90,
+                "norm_ema": self._norm_ema}
+
+    def set_state(self, s: dict):
+        self.alpha = float(s["alpha"])
+        self._stale_p90 = float(s["stale_p90"])
+        self._norm_ema = (None if s["norm_ema"] is None
+                          else float(s["norm_ema"]))
 
 
 def build_client_update_step(loss_fn: Callable, client_opt: Optimizer,
@@ -109,14 +193,18 @@ def build_buffer_commit_step(server_opt: ServerOptimizer, cfg: FLConfig,
     """jit-able server commit over a fixed-size buffer of K client deltas.
 
     commit(params, server_state, deltas, weights, staleness, losses, mask,
-           rng) -> (new_params, new_server_state, metrics)
+           ids, exponent, rng) -> (new_params, new_server_state, metrics)
 
     ``deltas`` leaves are [K, ...]; ``weights``/``staleness``/``losses``/
-    ``mask`` are [K].  Padding slots carry mask 0 (their deltas never
-    contribute).  ``losses`` feeds the "weighted" aggregation mode exactly
-    as in the sync round; "trimmed_mean" is rejected at build time —
-    coordinate-wise trimming over a staleness-discounted partial buffer has
-    no agreed semantics yet (ROADMAP open item).
+    ``mask`` are [K]; ``ids`` [K] int32 unique slot indices keying the
+    pairwise secure-agg masks; ``exponent`` is the staleness discount's
+    ``a`` as a runtime scalar (constant or adaptive).  Padding slots carry
+    mask 0 (their deltas — and their masks — never contribute).
+    ``losses`` feeds the "weighted" aggregation mode exactly as in the
+    sync round; "trimmed_mean" is rejected at build time — coordinate-wise
+    trimming over a staleness-discounted partial buffer has no agreed
+    semantics yet (ROADMAP open item), and is incompatible with masking
+    anyway.
     """
     if cfg.aggregation == "trimmed_mean":
         raise ValueError(
@@ -124,29 +212,20 @@ def build_buffer_commit_step(server_opt: ServerOptimizer, cfg: FLConfig,
             "buffered commit (robust trimming over a padded, "
             "staleness-weighted buffer is undefined); use fedavg/weighted "
             "or the sync round loop")
-    K = async_cfg.buffer_size
+    pipe = build_update_pipeline(cfg)
 
     def commit(params, server_state, deltas, weights, staleness, losses,
-               mask, rng):
-        w_raw = agg.effective_weights(weights, mask, losses, cfg.aggregation)
-        w = w_raw * staleness_weights(staleness.astype(jnp.float32),
-                                      async_cfg.staleness_exponent)
-        crng = jax.random.split(rng, K)
-        deltas = jax.vmap(lambda d, r: compress_tree(d, cfg.compression, r))(
-            deltas, crng)
-        # normalise by the UN-discounted weight mass: a uniformly-stale
-        # buffer must take a proportionally smaller server step (FedBuff),
-        # not have its discount cancel out in the mean's denominator
-        delta = agg.weighted_mean(deltas, w)
-        shrink = (w.sum() / jnp.maximum(w_raw.sum(), 1e-12)).astype(jnp.float32)
-        delta = jax.tree.map(lambda d: d * shrink.astype(d.dtype), delta)
+               mask, ids, exponent, rng):
+        delta, w_eff, _ = pipe.combine(
+            deltas, weights, mask, losses, rng, ids=ids,
+            staleness=staleness, exponent=exponent)
         new_params, new_state = server_opt.apply(params, delta, server_state)
         metrics = {
             "delta_norm": global_norm(delta),
             "n_updates": mask.sum(),
             "mean_staleness": (staleness * mask).sum()
             / jnp.maximum(mask.sum(), 1),
-            "effective_weight": w.sum(),
+            "effective_weight": w_eff.sum(),
         }
         return new_params, new_state, metrics
 

@@ -1,0 +1,256 @@
+"""Composable update pipeline: ONE stage stack for every execution regime.
+
+Before this module, the compress -> weight -> aggregate transform was
+re-implemented four times (round.py parallel / sequential /
+pod_sequential, async_round.py buffered commit), so every cross-cutting
+feature — compression tweaks, secure aggregation, staleness discounting
+— had to be patched in four places.  ``build_update_pipeline(cfg)``
+builds the stack once from ``FLConfig`` and all four regimes close over
+it.
+
+Stage contract
+--------------
+Stages are pure, jit-compatible functions over update pytrees plus
+per-slot scalars.  A "slot" is one client update in a batch of K (a sync
+cohort or an async commit buffer).  The canonical order is
+
+    compress -> weight/discount -> secure_mask -> aggregate -> normalise
+
+  * ``compress(tree, rng)``            straight-through compression of
+    what crosses the wire (repro.core.compression); per-slot rngs come
+    from ``jax.random.split(rng, K)`` so batched and streaming callers
+    draw identical randomness.
+  * ``client_weights(...) -> (w_eff, w_raw)``  combines data-size
+    weights, the participation mask, losses (aggregation='weighted') and
+    — async only — the staleness discount ``1/(1+s)^a``.  ``w_raw`` is
+    the UN-discounted mass; dividing by it (not by ``w_eff``) is what
+    makes a uniformly stale buffer take a proportionally smaller server
+    step (FedBuff) instead of having the discount cancel in the mean.
+  * ``secure_mask``                    adds commit-keyed pairwise masks
+    (core.secure_agg) to the PRE-WEIGHTED slot updates.  Masking must
+    follow weighting: the server sums ``w_i * d_i + m_i`` and the
+    ``m_i`` cancel only if they are not scaled per-slot afterwards.
+    (The ISSUE's "compress -> secure_mask -> weight" stage list names
+    the stages; the algebra fixes this order.)
+  * ``aggregate``                      weighted sum over the slot dim
+    (or a plain sum of pre-weighted masked slots).
+  * ``normalise``                      divide by the raw weight mass.
+
+Execution-mode mapping:
+  * parallel / async commit — ``combine`` consumes the full [K, ...]
+    stack (trimmed-mean and hierarchical pod variants included).
+  * sequential — the scan builds per-slot contributions with
+    ``contribution`` and folds them with ``accum_add``; ``normalise``
+    closes the stream.  Identical math, streaming memory.
+  * pod_sequential / hierarchical — per-pod partial sums are compressed
+    (``compress``) and combined across pods with ``combine_pods``.
+
+Commit-keyed masking scheme (cfg.secure_agg)
+--------------------------------------------
+Masks are ``PRF(commit_key, min(id_i, id_j), max(id_i, id_j))`` with
+sign ``sgn(id_j - id_i)`` on slot i's side — symmetric in the pair, so
+they cancel in the sum.  The commit key is derived (``fold_in``) from
+the per-commit rng, which is unique per commit and checkpointed, so
+kill/resume reproduces the exact masks.  Participant ids are UNIQUE
+per-commit slot indices (arange over the cohort/buffer/pods — a fast
+client landing two buffered updates in one async commit occupies two
+slots, i.e. two logical participants; duplicate ids would make a pair
+key collide and its mask survive the sum uncancelled).  Slots padded
+out by timeout commits, dropped clients, or ``max_staleness`` drops
+carry participation 0: every pair mask touching them is zeroed — the
+functional stand-in for the protocol's seed-reveal unwinding.  The
+server therefore only ever sees masked per-slot updates whose masks
+cancel within each commit; masked-vs-plain aggregates agree to float32
+cancellation error (<= 1e-5, pinned in tests/test_secure_pipeline.py).
+
+Build-time rejections: ``secure_agg`` + ``trimmed_mean`` (coordinate
+-wise trimming needs individual updates, which masking is designed to
+hide).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core import secure_agg as sec
+from repro.core.compression import compress_tree
+from repro.core.secure_agg import MASK_DOMAIN_TAG
+
+if TYPE_CHECKING:                       # avoid circular import with round.py
+    from repro.core.round import FLConfig
+
+
+def staleness_weights(staleness, exponent):
+    """The FedBuff polynomial discount ``1 / (1 + s)^a``.
+
+    ``staleness`` counts server commits between a client's dispatch and
+    its update's arrival; works on jnp or np arrays (used as its own
+    NumPy reference in tests).  ``exponent`` may be a traced scalar —
+    the adaptive-alpha path feeds the controller's current value per
+    commit."""
+    return (1.0 + staleness) ** (-exponent)
+
+
+class UpdatePipeline:
+    """The configured stage stack.  Stateless; every method is pure and
+    jit-compatible, so one instance serves vmapped, scanned and batched
+    callers alike."""
+
+    def __init__(self, cfg: "FLConfig", n_pods: int = 1):
+        if cfg.secure_agg and cfg.aggregation == "trimmed_mean":
+            raise ValueError(
+                "secure_agg is incompatible with aggregation='trimmed_mean': "
+                "coordinate-wise trimming needs the individual updates that "
+                "pairwise masking hides; use fedavg/weighted")
+        self.cfg = cfg
+        self.n_pods = n_pods
+
+    # ------------------------------------------------------------- stage 1
+    def compress(self, tree, rng):
+        return compress_tree(tree, self.cfg.compression, rng)
+
+    def compress_each(self, stacked, rng):
+        """vmap the compress stage over the leading slot dim."""
+        K = jax.tree.leaves(stacked)[0].shape[0]
+        rngs = jax.random.split(rng, K)
+        return jax.vmap(self.compress)(stacked, rngs)
+
+    # ------------------------------------------------------------- stage 2
+    def client_weights(self, weights, mask, losses=None, staleness=None,
+                      exponent=None):
+        """(w_eff, w_raw): discounted and raw per-slot weight vectors."""
+        w_raw = agg.effective_weights(weights, mask, losses,
+                                      self.cfg.aggregation)
+        if staleness is None:
+            return w_raw, w_raw
+        w_eff = w_raw * staleness_weights(staleness.astype(jnp.float32),
+                                          exponent)
+        return w_eff, w_raw
+
+    def client_weight(self, w_c, m_c, loss_c):
+        """Scalar form for streaming (scan) callers."""
+        return agg.effective_weights(w_c[None], m_c[None], loss_c[None],
+                                     self.cfg.aggregation)[0]
+
+    # ------------------------------------------------------------- stage 3
+    def mask_key(self, rng):
+        """Commit key for this aggregation's pairwise masks.  rng is the
+        per-commit step rng — unique per commit and checkpointed, so it
+        stands in for fold_in(base, commit_id) with identical algebra."""
+        return jax.random.fold_in(rng, MASK_DOMAIN_TAG)
+
+    def secure_mask(self, weighted_stack, key, ids, participation):
+        return sec.mask_batch(weighted_stack, key, ids, participation)
+
+    # --------------------------------------------------------- stages 4/5
+    def weighted_sum(self, stacked, w):
+        """sum_i w_i * d_i over the slot dim, in float32."""
+        def one(d):
+            wb = w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(jnp.float32)
+            return (d.astype(jnp.float32) * wb).sum(0)
+        return jax.tree.map(one, stacked)
+
+    def normalise(self, summed, w_raw_sum):
+        denom = jnp.maximum(w_raw_sum, 1e-12)
+        return jax.tree.map(lambda s: (s / denom.astype(s.dtype)), summed)
+
+    # ----------------------------------------------------------- streaming
+    def accum_init(self, params_like):
+        dt = jnp.dtype(self.cfg.accum_dtype)
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params_like)
+
+    def contribution(self, delta, wt, rng, idx=None, ids=None,
+                     participation=None, key=None):
+        """One slot's contribution to the running sum: compress ->
+        weight -> (secure-mask).  The masked value is what "crosses the
+        wire" to the server accumulator; masks cancel once every
+        participant's contribution has been folded in.  The weighting
+        product is carried in ``accum_dtype`` so streaming accumulation
+        keeps the precision that knob asks for."""
+        dt = jnp.dtype(self.cfg.accum_dtype)
+        d = self.compress(delta, rng)
+        pre = jax.tree.map(lambda x: wt.astype(dt) * x.astype(dt), d)
+        if self.cfg.secure_agg:
+            pre = sec.mask_slot(key, ids, participation, idx, pre)
+        return pre
+
+    def accum_add(self, acc, contrib):
+        return jax.tree.map(lambda a, c: a + c.astype(a.dtype), acc, contrib)
+
+    # --------------------------------------------------------- combinators
+    def combine(self, deltas, weights, mask, losses, rng, ids=None,
+                staleness=None, exponent=None):
+        """The full batched stack over [K, ...] slot deltas.
+
+        Returns (delta, w_eff, w_raw).  Serves the parallel sync mode
+        (staleness=None) and the async buffered commit (staleness +
+        exponent set); handles the trimmed-mean and hierarchical pod
+        variants so no execution mode re-implements them."""
+        w_eff, w_raw = self.client_weights(weights, mask, losses,
+                                           staleness, exponent)
+        if self.cfg.aggregation == "trimmed_mean":
+            # robust trimming consumes RAW per-slot deltas (no compression,
+            # no masking — rejected at build time): same as the historic
+            # inline path
+            return agg.trimmed_mean(deltas, mask), w_eff, w_raw
+        if self.cfg.hierarchical and self.n_pods > 1:
+            delta = self._combine_hierarchical(deltas, w_eff, w_raw, rng)
+            return delta, w_eff, w_raw
+        stacked = self.compress_each(deltas, rng)
+        if self.cfg.secure_agg:
+            if ids is None:
+                ids = jnp.arange(mask.shape[0], dtype=jnp.int32)
+            pre = jax.tree.map(
+                lambda d: d.astype(jnp.float32) * w_eff.reshape(
+                    (-1,) + (1,) * (d.ndim - 1)), stacked)
+            masked = self.secure_mask(pre, self.mask_key(rng), ids, mask)
+            summed = jax.tree.map(lambda m: m.astype(jnp.float32).sum(0),
+                                  masked)
+        else:
+            summed = self.weighted_sum(stacked, w_eff)
+        return self.normalise(summed, w_raw.sum()), w_eff, w_raw
+
+    def _combine_hierarchical(self, deltas, w_eff, w_raw, rng):
+        """Pod-local weighted sums -> compress -> cross-pod combine: only
+        the compressed pod sums cross the slow cross-pod link."""
+        P = self.n_pods
+        K = w_eff.shape[0]
+        per_pod = K // P
+
+        def pod_sums(d):
+            wb = w_eff.reshape(P, per_pod)
+            dp = d.reshape((P, per_pod) + d.shape[1:])
+            return (dp * wb.reshape(wb.shape + (1,) * (d.ndim - 1)
+                                    ).astype(d.dtype)).sum(1)
+
+        sums = jax.tree.map(pod_sums, deltas)          # [P, ...] un-normalised
+        return self.combine_pods(sums, w_raw.sum(), rng)
+
+    def combine_pods(self, pod_sums, w_total, rng, compressed=False):
+        """Cross-pod tail of the stack: compress each pod's partial sum,
+        secure-mask BETWEEN PODS (privacy at site granularity — each
+        pod's aggregate is hidden from the others and the server), sum,
+        normalise by the total raw weight mass.
+
+        ``compressed=True`` when the caller already ran the compress
+        stage per pod — pod_sequential compresses INSIDE its
+        spmd-annotated pod vmap so the quantize/top-k work stays
+        pod-local under GSPMD instead of all-gathering each pod's
+        partial sum (see build_fl_round_step's client_spmd_axes note)."""
+        P = jax.tree.leaves(pod_sums)[0].shape[0]
+        sums = pod_sums if compressed else self.compress_each(pod_sums, rng)
+        if self.cfg.secure_agg:
+            ones = jnp.ones((P,), jnp.float32)
+            sums = self.secure_mask(sums, self.mask_key(rng),
+                                    jnp.arange(P, dtype=jnp.int32), ones)
+        summed = jax.tree.map(lambda s: s.astype(jnp.float32).sum(0), sums)
+        return self.normalise(summed, w_total)
+
+
+def build_update_pipeline(cfg: "FLConfig", n_pods: int = 1) -> UpdatePipeline:
+    """Build the stage stack once from FLConfig; all execution modes of
+    round.py and async_round.py close over the returned pipeline."""
+    return UpdatePipeline(cfg, n_pods=n_pods)

@@ -18,6 +18,11 @@ Client execution modes (DESIGN.md §2):
   * sequential — lax.scan over clients; each client's local batch uses the
                  full mesh.  Required when C parallel model replicas cannot
                  fit HBM (>=100B-param archs).
+
+All modes fold their client updates through the SAME composable stage stack
+(compress -> weight -> secure_mask -> aggregate -> normalise) built once by
+``repro.core.pipeline.build_update_pipeline`` — the async buffered commit
+(core.async_round) closes over the identical stack.
 """
 from __future__ import annotations
 
@@ -28,8 +33,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation as agg
-from repro.core.compression import CompressionConfig, compress_tree
+from repro.core.compression import CompressionConfig
+from repro.core.pipeline import build_update_pipeline
 from repro.models import sharding as shd
 from repro.optim import Optimizer, ServerOptimizer
 
@@ -54,6 +59,9 @@ class FLConfig:
     hierarchical: bool = False        # pod-local then compressed cross-pod agg
     accum_dtype: str = "float32"      # sequential-mode delta accumulator
     use_fused_update: bool = False    # Pallas fedprox_update kernel
+    secure_agg: bool = False          # commit-keyed pairwise masking: the
+    #                                   server only sees masked updates whose
+    #                                   masks cancel per commit (core.pipeline)
 
 
 def tree_sub(a, b):
@@ -144,10 +152,14 @@ def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
     ~600 MB cross-pod all-gathers of the per-pod weight copies per layer per
     step (EXPERIMENTS.md §Perf iteration 4)."""
     local_train = build_local_train(loss_fn, client_opt, cfg, param_shardings)
+    pipe = build_update_pipeline(cfg, n_pods=n_pods)
     C = cfg.num_clients
 
-    def compress(delta, rng):
-        return compress_tree(delta, cfg.compression, rng)
+    # All three modes consume the SAME stage stack (core.pipeline): they
+    # differ only in how client training is laid out (vmap / scan / pod
+    # scan-of-vmap) and therefore in which pipeline entry point — batched
+    # ``combine``, streaming ``contribution``/``accum_add``, or the cross-pod
+    # ``combine_pods`` tail — folds the updates.
 
     # ------------------------------------------------------------- parallel
     def round_parallel(global_params, server_state, client_batches, weights,
@@ -162,28 +174,7 @@ def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
         deltas, losses = jax.vmap(client_fn, in_axes=(None, 0, 0),
                                   spmd_axis_name=client_spmd_axes)(
             global_params, client_batches, rngs)
-        w = agg.effective_weights(weights, mask, losses, cfg.aggregation)
-        if cfg.aggregation == "trimmed_mean":
-            delta = agg.trimmed_mean(deltas, mask)
-        elif cfg.hierarchical and n_pods > 1:
-            # pod-local weighted mean -> compress -> cross-pod mean.
-            per_pod = C // n_pods
-
-            def pod_mean(d):
-                wb = w.reshape(n_pods, per_pod)
-                dp = d.reshape((n_pods, per_pod) + d.shape[1:])
-                num = (dp * wb.reshape(wb.shape + (1,) * (d.ndim - 1)).astype(d.dtype)).sum(1)
-                return num  # [n_pods, ...] un-normalised pod sums
-
-            pod_sums = jax.tree.map(pod_mean, deltas)
-            crng = jax.random.split(rng, n_pods)
-            pod_sums = jax.vmap(lambda t, r: compress(t, r))(pod_sums, crng)
-            denom = jnp.maximum(w.sum(), 1e-12)
-            delta = jax.tree.map(lambda d: d.sum(0) / denom.astype(d.dtype), pod_sums)
-        else:
-            crng = jax.random.split(rng, C)
-            deltas = jax.vmap(compress)(deltas, crng)
-            delta = agg.weighted_mean(deltas, w)
+        delta, _, _ = pipe.combine(deltas, weights, mask, losses, rng)
         new_params, new_state = server_opt.apply(global_params, delta, server_state)
         metrics = {
             "client_loss": (losses * mask).sum() / jnp.maximum(mask.sum(), 1),
@@ -195,27 +186,26 @@ def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
     # ----------------------------------------------------------- sequential
     def round_sequential(global_params, server_state, client_batches, weights,
                          mask, rng):
-        accum_dt = jnp.dtype(cfg.accum_dtype)
-        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt), global_params)
+        zero = pipe.accum_init(global_params)
+        key = pipe.mask_key(rng)
+        ids = jnp.arange(C, dtype=jnp.int32)
 
         def client_body(carry, xs):
             acc, wsum, loss_sum = carry
-            batch_c, w_c, m_c, r = xs
+            batch_c, w_c, m_c, idx, r = xs
             delta, loss = local_train(global_params, batch_c, r)
-            delta = compress(delta, r)
-            wt = agg.effective_weights(w_c[None], m_c[None],
-                                       loss[None], cfg.aggregation)[0]
-            acc = constrain_like(jax.tree.map(
-                lambda a, d: a + wt.astype(accum_dt) * d.astype(accum_dt),
-                acc, delta), param_shardings)
+            wt = pipe.client_weight(w_c, m_c, loss)
+            contrib = pipe.contribution(delta, wt, r, idx=idx, ids=ids,
+                                        participation=mask, key=key)
+            acc = constrain_like(pipe.accum_add(acc, contrib),
+                                 param_shardings)
             return (acc, wsum + wt, loss_sum + loss * m_c), None
 
         rngs = jax.random.split(rng, C)
         (acc, wsum, loss_sum), _ = jax.lax.scan(
             client_body, (zero, jnp.float32(0.0), jnp.float32(0.0)),
-            (client_batches, weights, mask, rngs))
-        delta = jax.tree.map(lambda a: a / jnp.maximum(wsum, 1e-12).astype(a.dtype),
-                             acc)
+            (client_batches, weights, mask, ids, rngs))
+        delta = pipe.normalise(acc, wsum)
         new_params, new_state = server_opt.apply(global_params, delta, server_state)
         metrics = {
             "client_loss": loss_sum / jnp.maximum(mask.sum(), 1),
@@ -231,47 +221,50 @@ def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
     # (each client's batch is sharded over `data` within its pod only);
     # pods exchange exactly one compressed delta per round — the paper's
     # hierarchical HPC-site/cloud-site topology (EXPERIMENTS.md §Perf it. 4).
+    # The compress stage runs inside the pod body (pod-local under GSPMD);
+    # the cross-pod tail (secure-mask-between-pods -> sum -> normalise) is
+    # the pipeline's ``combine_pods`` stage.
     def round_pod_sequential(global_params, server_state, client_batches,
                              weights, mask, rng):
         P = n_pods
         Cp = C // P
-        accum_dt = jnp.dtype(cfg.accum_dtype)
 
         def pod_body(batches_p, w_p, m_p, rng_p):
             with shd.exclude_axes(*_axes_tuple(client_spmd_axes)):
-                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt),
-                                    global_params)
+                zero = pipe.accum_init(global_params)
+
+                accum_dt = jnp.dtype(cfg.accum_dtype)
 
                 def client_body(carry, xs):
                     acc, wsum, loss_sum = carry
                     batch_c, w_c, m_c, r = xs
                     delta, loss = local_train(global_params, batch_c, r)
-                    wt = agg.effective_weights(w_c[None], m_c[None],
-                                               loss[None], cfg.aggregation)[0]
-                    acc = jax.tree.map(
-                        lambda a, d: a + wt.astype(accum_dt)
-                        * d.astype(accum_dt), acc, delta)
+                    wt = pipe.client_weight(w_c, m_c, loss)
+                    acc = pipe.accum_add(
+                        acc, jax.tree.map(
+                            lambda d: wt.astype(accum_dt)
+                            * d.astype(accum_dt), delta))
                     return (acc, wsum + wt, loss_sum + loss * m_c), None
 
                 rngs = jax.random.split(rng_p, Cp)
                 (acc, wsum, loss_sum), _ = jax.lax.scan(
                     client_body, (zero, jnp.float32(0.0), jnp.float32(0.0)),
                     (batches_p, w_p, m_p, rngs))
-                # compress the POD-level sum — this is what crosses the slow
-                # cross-pod link (paper: compress on WAN, not Infiniband)
-                acc = compress(acc, rng_p)
+                # compress the POD-level sum INSIDE the spmd-mapped body —
+                # this is what crosses the slow cross-pod link (paper:
+                # compress on WAN, not Infiniband), and doing it here keeps
+                # the quantize/top-k work pod-local under GSPMD
+                acc = pipe.compress(acc, rng_p)
                 return acc, wsum, loss_sum
 
         resh = jax.tree.map(
             lambda x: x.reshape((P, Cp) + x.shape[1:]), client_batches)
         w2 = weights.reshape(P, Cp)
         m2 = mask.reshape(P, Cp)
-        rngs = jax.random.split(rng, P)
         accs, wsums, loss_sums = jax.vmap(
-            pod_body, spmd_axis_name=client_spmd_axes)(resh, w2, m2, rngs)
-        denom = jnp.maximum(wsums.sum(), 1e-12)
-        delta = jax.tree.map(lambda a: (a.sum(0) / denom.astype(a.dtype)),
-                             accs)
+            pod_body, spmd_axis_name=client_spmd_axes)(
+            resh, w2, m2, jax.random.split(rng, P))
+        delta = pipe.combine_pods(accs, wsums.sum(), rng, compressed=True)
         new_params, new_state = server_opt.apply(global_params, delta,
                                                  server_state)
         metrics = {

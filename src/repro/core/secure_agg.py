@@ -1,63 +1,137 @@
-"""Secure aggregation via pairwise additive masking (Bonawitz et al. 2017),
-the paper's §6 "Secure aggregation" future-work item, implemented as an
-optional layer over the round step.
+"""Secure aggregation via commit-keyed pairwise additive masking.
 
-Each participating client (i) adds, for every other participant (j), a
-pseudorandom mask PRF(seed_ij) with sign sgn(j-i); all masks cancel in the
-sum, so the orchestrator learns ONLY the aggregate — never an individual
-update.  Dropout handling uses the standard seed-reveal: masks are only
-applied between pairs of clients that both participate (simulated: the
-jit'd round knows the final participation vector, standing in for the
-reveal round).
+The protocol algebra is Bonawitz et al. 2017 (the paper's §6 privacy
+layer): each participating update slot (i) adds, for every other
+participating slot (j), a pseudorandom mask with sign sgn(id_j - id_i);
+the masks cancel pairwise in the sum, so the aggregator only ever learns
+the aggregate — never an individual update.
 
-This is a faithful *functional* implementation of the protocol algebra
-(masking, cancellation, dropout unwinding).  The Diffie-Hellman key
-agreement and Shamir secret sharing of the real protocol are outside an
-offline container's scope; the symmetric seed matrix stands in for the
-agreed keys.
+What changed vs. the original module (and why):
+
+  * **Commit-keyed PRF, not a round-cohort seed matrix.**  Masks are
+    ``PRF(commit_key, min(id_i, id_j), max(id_i, id_j))`` where the
+    commit key is unique per server commit (``commit_key(commit_id)``,
+    or any per-commit PRNGKey such as the commit step's rng).  A
+    buffered-async server has no fixed round cohort — the participant
+    set of a commit is whatever subset of the buffer survived timeouts
+    and ``max_staleness`` drops — so the key must be bound to the commit
+    and the pair identities, nothing else.  Two slots of the same pair
+    always derive the same key regardless of slot order (min/max), which
+    is what makes the masks cancel.
+  * **Dropout / padding unwinding via the participation vector.**  A
+    slot padded out by a timeout commit (mask 0) or a dropped client
+    never participates: every pair mask touching it is multiplied by
+    ``p_i * p_j`` and vanishes — the functional stand-in for the seed
+    -reveal round of the real protocol (participants reveal the pair
+    seeds of dropped peers so the server can subtract the orphaned
+    masks).
+  * **Vectorised masking.**  ``mask_update`` used to build its masks in
+    an O(C^2) Python loop of per-pair ``jax.random.normal`` calls, which
+    neither jits nor scales.  Mask generation is now a ``vmap`` over a
+    folded-in key array (``_pair_keys``), so the whole masking stage is
+    a single jit-compatible expression.
+
+The Diffie-Hellman key agreement and Shamir sharing of the real protocol
+are outside an offline container's scope; the keyed PRF stands in for
+the agreed pair keys and the participation vector for the reveal round.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+MASK_DOMAIN_TAG = 0x5EC_A66   # domain separator: secure-agg mask keys
+#                               (shared with core.pipeline's key derivation)
 
 
-def pairwise_seeds(round_seed: int, num_clients: int) -> np.ndarray:
-    """[C, C] symmetric int32 seed matrix (seed_ij == seed_ji), host-side —
-    stands in for per-pair DH-agreed keys."""
-    rng = np.random.default_rng(round_seed)
-    m = rng.integers(0, 2**31 - 1, (num_clients, num_clients), np.int64)
-    sym = np.triu(m, 1)
-    return (sym + sym.T).astype(np.int32)
+def commit_key(commit_id, base_seed: int = 0):
+    """Per-commit PRF key: PRNGKey(base_seed) folded with the commit id.
+
+    Any per-commit-unique PRNGKey works as a commit key (the pipeline
+    derives one from the commit step's rng); this helper is the explicit
+    (commit_id -> key) form used by tests and documentation."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(base_seed), MASK_DOMAIN_TAG),
+        commit_id)
 
 
-def _pair_mask(seed, shape):
-    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+def pair_mask(key, id_i, id_j, shape):
+    """The symmetric pair mask PRF(key, i, j); sign is applied by callers
+    (sgn(id_j - id_i) on slot i's side)."""
+    lo = jnp.minimum(id_i, id_j)
+    hi = jnp.maximum(id_i, id_j)
+    k = jax.random.fold_in(jax.random.fold_in(key, lo), hi)
+    return jax.random.normal(k, shape, jnp.float32)
 
 
-def mask_update(update_tree, client_idx: int, seeds, participation):
-    """Add client `client_idx`'s pairwise masks.  participation: [C] 0/1 —
-    masks are only exchanged between pairs that both participate."""
-    C = seeds.shape[0]
+def _pair_coef(ids, participation):
+    """[K, K] signed pair coefficients sgn(id_j - id_i) * p_i * p_j.
+
+    Zero on the diagonal (sgn 0), zero for any pair touching a
+    non-participant — the dropout/padding unwinding.
+
+    NOTE: participating ids must be UNIQUE within a commit.  Two slots
+    sharing an id would both derive the SAME pair key toward any third
+    participant and add its mask twice against one subtraction — the
+    masks would NOT cancel.  Callers therefore key on per-commit slot
+    indices (a client contributing two buffered updates to one commit
+    occupies two distinct slots), never on raw client ids."""
+    sign = jnp.sign(ids[None, :] - ids[:, None]).astype(jnp.float32)
+    return sign * participation[None, :] * participation[:, None]
+
+
+def _row_total(key, ids, coef_row, id_i, shape):
+    """Slot i's summed pair masks: K PRF draws (vmapped), one einsum."""
+    lo = jnp.minimum(ids, id_i)
+    hi = jnp.maximum(ids, id_i)
+    keys = jax.vmap(
+        lambda l, h: jax.random.fold_in(jax.random.fold_in(key, l), h))(lo, hi)
+    pm = jax.vmap(lambda k: jax.random.normal(k, shape, jnp.float32))(keys)
+    return jnp.einsum("j,j...->...", coef_row, pm)
+
+
+def mask_slot(key, ids, participation, idx, tree):
+    """Mask ONE slot's update (tree without a leading slot dim) — the
+    streaming form used inside sequential scans.  O(K) pair draws, all
+    vmapped."""
+    coef = _pair_coef(ids, participation)[idx]          # [K]
 
     def mask_leaf(leaf):
-        total = jnp.zeros(leaf.shape, jnp.float32)
-        for j in range(C):
-            if j == client_idx:
-                continue
-            m = _pair_mask(seeds[client_idx, j], leaf.shape)
-            sign = 1.0 if client_idx < j else -1.0
-            total = total + sign * m * participation[j]
-        total = total * participation[client_idx]
+        total = _row_total(key, ids, coef, ids[idx], leaf.shape)
         return (leaf.astype(jnp.float32) + total).astype(leaf.dtype)
 
-    return jax.tree.map(mask_leaf, update_tree)
+    return jax.tree.map(mask_leaf, tree)
+
+
+def mask_batch(tree, key, ids, participation):
+    """Mask a full stacked batch (leaves [K, ...]): the pair-mask PRF is a
+    vmapped fold_in over each slot's key row, streamed slot by slot with
+    ``lax.map`` so peak memory stays O(K * leaf) — never the O(K^2 * leaf)
+    of materialising the full pair grid — while remaining one
+    jit-compatible expression (no Python loop over pairs)."""
+    K = ids.shape[0]
+    coef = _pair_coef(ids, participation)               # [K, K]
+
+    def mask_leaf(leaf):
+        shape = leaf.shape[1:]
+        totals = jax.lax.map(
+            lambda i: _row_total(key, ids, coef[i], ids[i], shape),
+            jnp.arange(K))
+        return (leaf.astype(jnp.float32) + totals).astype(leaf.dtype)
+
+    return jax.tree.map(mask_leaf, tree)
+
+
+def mask_update(update_tree, client_idx: int, key, ids, participation):
+    """Add slot ``client_idx``'s pairwise masks to its (pre-weighted)
+    update.  Vectorised replacement for the old per-pair Python loop —
+    see ``mask_slot``."""
+    return mask_slot(key, ids, participation, client_idx, update_tree)
 
 
 def aggregate_masked(masked_updates, participation):
-    """Sum masked updates over the leading client dim: pairwise masks cancel
+    """Sum masked updates over the leading slot dim: pairwise masks cancel
     among participants, recovering sum(participating updates) exactly."""
     def agg(d):
         p = participation.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
@@ -65,10 +139,13 @@ def aggregate_masked(masked_updates, participation):
     return jax.tree.map(agg, masked_updates)
 
 
-def secure_weighted_mean(updates, weights, participation, seeds):
-    """End-to-end: mask each client's (pre-weighted) update, aggregate, and
-    normalise.  `updates` leaves have leading client dim C."""
-    C = seeds.shape[0]
+def secure_weighted_mean(updates, weights, participation, key, ids=None):
+    """End-to-end reference: pre-weight each slot's update, mask, sum,
+    normalise by the (public) participating weight mass.  `updates`
+    leaves have leading slot dim K."""
+    K = jax.tree.leaves(updates)[0].shape[0]
+    if ids is None:
+        ids = jnp.arange(K, dtype=jnp.int32)
 
     def weighted(d):
         w = (weights * participation).reshape(
@@ -76,9 +153,16 @@ def secure_weighted_mean(updates, weights, participation, seeds):
         return d.astype(jnp.float32) * w
 
     pre = jax.tree.map(weighted, updates)
-    masked = [mask_update(jax.tree.map(lambda x: x[i], pre), i, seeds,
-                          participation) for i in range(C)]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masked)
-    total = aggregate_masked(stacked, participation)
+    masked = mask_batch(pre, key, ids, participation)
+    total = aggregate_masked(masked, participation)
     denom = jnp.maximum((weights * participation).sum(), 1e-12)
     return jax.tree.map(lambda t: t / denom, total)
+
+
+def masked_payload_bytes(tree) -> int:
+    """Wire bytes of one MASKED update.  Additive masks are dense f32
+    noise, so quantization/sparsity savings do not survive masking (the
+    real protocol works in a finite ring for the same reason): every
+    leaf costs 4 bytes/element on the wire, whatever the compression
+    config says the plain path would have paid."""
+    return int(sum(np.prod(l.shape) * 4 for l in jax.tree.leaves(tree)))

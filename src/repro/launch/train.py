@@ -34,6 +34,16 @@ from repro.orchestrator import (AsyncOrchestrator, FaultConfig, Orchestrator,
 from repro.sched import HybridAdapter, JobSpec
 
 
+def _staleness_exp(v: str):
+    if v == "adaptive":
+        return v
+    try:
+        return float(v)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected a float or 'adaptive', got {v!r}")
+
+
 def build_task(name: str, n_clients: int, seed: int):
     if name == "cifar10":
         ds = cifar10_like(n=20_000, seed=seed)
@@ -87,8 +97,15 @@ def main():
                          "commits (--rounds then counts server commits)")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="async: commit every K buffered updates")
-    ap.add_argument("--staleness-exp", type=float, default=0.5,
-                    help="async: staleness discount 1/(1+s)^a")
+    ap.add_argument("--staleness-exp", type=_staleness_exp, default=0.5,
+                    help="async: staleness discount 1/(1+s)^a — a float, or "
+                         "'adaptive' for the online FedAsync-style alpha "
+                         "tuned from the observed staleness distribution")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="commit-keyed pairwise masking (Bonawitz-style "
+                         "secure aggregation): the server only sees masked "
+                         "updates whose masks cancel within each round/"
+                         "commit; works in BOTH --mode sync and async")
     ap.add_argument("--max-staleness", type=int, default=20)
     ap.add_argument("--commit-timeout", type=float, default=0.0,
                     help="async: commit a partial buffer after T sim-seconds")
@@ -134,6 +151,7 @@ def main():
         mode=args.mode,
         num_clients=args.clients_per_round, local_steps=args.local_steps,
         client_lr=args.lr, fedprox_mu=args.mu if args.algo == "fedprox" else 0.0,
+        secure_agg=args.secure_agg,
         compression=CompressionConfig(quantize_bits=args.quantize_bits,
                                       topk_frac=args.topk_frac,
                                       dropout_frac=args.fed_dropout))
@@ -181,6 +199,9 @@ def main():
                              verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "async",
+            "secure_agg": args.secure_agg,
+            "mask_overhead_bytes": sum(l.mask_overhead_bytes
+                                       for l in orch.logs),
             "commits": orch.version,
             "updates_applied": orch.updates_applied,
             "dropped_stale": orch.dropped_stale,
@@ -214,6 +235,7 @@ def main():
                              start_round=start_round, verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "sync",
+            "secure_agg": args.secure_agg,
             "rounds": args.rounds,
             "final_eval": orch.logs[-1].eval_metric if orch.logs else None,
             "virtual_time_s": orch.virtual_clock,

@@ -26,9 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.transport import CommAccountant, link_for_site
-from repro.core.async_round import (AsyncConfig, build_buffer_commit_step,
+from repro.core.async_round import (AdaptiveStalenessController, AsyncConfig,
+                                    build_buffer_commit_step,
                                     build_client_update_step)
 from repro.core.compression import payload_bytes
+from repro.core.secure_agg import masked_payload_bytes
 from repro.core.round import FLConfig
 from repro.optim import get_client_optimizer, get_server_optimizer
 from repro.orchestrator.fault import (RECOVERABLE_FAULTS, FaultConfig,
@@ -70,6 +72,9 @@ class CommitLog:
     eval_metric: float = float("nan")
     n_recovered: int = 0               # committed updates that survived a fault
     recovery_time_s: float = 0.0       # mean extra latency those updates paid
+    staleness_alpha: float = 0.5       # discount exponent used BY this commit
+    mask_overhead_bytes: int = 0       # uplink bytes masking added over the
+    #                                    plain (compressed) wire payload
 
 
 @dataclass
@@ -113,6 +118,11 @@ class AsyncOrchestrator:
             self.loss_fn, client_opt, self.fl))
         self._commit_step = jax.jit(build_buffer_commit_step(
             server_opt, self.fl, self.async_cfg))
+        # staleness exponent: a constant, or an online controller whose alpha
+        # feeds the jit'd commit step as a runtime scalar (no recompiles)
+        self._staleness_ctrl = (AdaptiveStalenessController()
+                                if self.async_cfg.adaptive_staleness else None)
+        self._alpha = self.async_cfg.initial_exponent()
         # simulation state
         self.clock = 0.0
         self.version = 0              # server commit counter
@@ -135,8 +145,18 @@ class AsyncOrchestrator:
         return self._server_opt.init(params)
 
     def _payload_bytes_cache(self, params):
+        """(down_bytes, up_bytes) one dispatch/arrival costs on the wire.
+
+        Downlink is the (compressed) params broadcast.  Uplink is the
+        client's update: under secure_agg the additive masks make it dense
+        f32 — compression savings do not survive masking — so the masked
+        wire size is what both the comm ledger and the simulated transfer
+        time are charged."""
         if not hasattr(self, "_pb"):
-            self._pb = payload_bytes(params, self.fl.compression)
+            down = payload_bytes(params, self.fl.compression)
+            up = (masked_payload_bytes(params) if self.fl.secure_agg
+                  else down)
+            self._pb = (down, up)
         return self._pb
 
     # ------------------------------------------------------------- dispatch
@@ -161,9 +181,9 @@ class AsyncOrchestrator:
         client_idx = next(i for i, c in enumerate(self.fleet)
                           if c.cid == sel[0])
         client = self.fleet[client_idx]
-        upd_bytes = self._payload_bytes_cache(params)
+        down_bytes, up_bytes = self._payload_bytes_cache(params)
         dur = float(simulate_round_times(
-            [client], self.flops_per_client_round, upd_bytes, self.rng,
+            [client], self.flops_per_client_round, up_bytes, self.rng,
             self.straggler)[0])
         # the injector's round clock advances per COMMIT (the async analogue
         # of a round, in _do_commit) so FaultConfig partition probabilities /
@@ -191,7 +211,7 @@ class AsyncOrchestrator:
             # computed up front and survives the fault.
             self._train_client(upd, client, params)
         link = link_for_site(client.site)
-        self.comm.log(self.version, client.cid, "down", upd_bytes, link)
+        self.comm.log(self.version, client.cid, "down", down_bytes, link)
         self._inflight.add(client.cid)
         heapq.heappush(self._events, (arrival, self._seq, upd))
         self._seq += 1
@@ -213,9 +233,9 @@ class AsyncOrchestrator:
             # retry from scratch against the CURRENT global params: fresh
             # downlink, fresh batches, staleness resets to the live version
             upd.steps_done = 0
-            upd_bytes = self._payload_bytes_cache(params)
+            down_bytes, up_bytes = self._payload_bytes_cache(params)
             attempt = float(simulate_round_times(
-                [client], self.flops_per_client_round, upd_bytes, self.rng,
+                [client], self.flops_per_client_round, up_bytes, self.rng,
                 self.straggler)[0])
             # duration_s is the recovery baseline: the fault-free duration of
             # the attempt that will actually land.  The retry redraws its
@@ -224,7 +244,7 @@ class AsyncOrchestrator:
             upd.duration_s = attempt
             self._train_client(upd, client, params)
             upd.dispatch_version = self.version
-            self.comm.log(self.version, client.cid, "down", upd_bytes,
+            self.comm.log(self.version, client.cid, "down", down_bytes,
                           link_for_site(client.site))
         else:  # resume: re-run only the steps after the local checkpoint
             attempt = upd.duration_s * (L - upd.steps_done) / L
@@ -243,7 +263,15 @@ class AsyncOrchestrator:
 
     # --------------------------------------------------------------- commit
     def _stack_buffer(self):
-        """Pad the live buffer to K and stack it for the jit'd commit step."""
+        """Pad the live buffer to K and stack it for the jit'd commit step.
+
+        ``ids`` carries per-commit SLOT indices that key the pairwise
+        secure-agg masks.  Slot indices — not client cids — because mask
+        cancellation requires unique participant ids within a commit, and
+        a fast client can land two buffered updates in the same commit
+        (each occupies its own slot/identity, like two logical
+        participants).  Padding slots carry mask 0, so every pair mask
+        touching them is unwound (seed-reveal stand-in)."""
         K = self.async_cfg.buffer_size
         ups = [u for u, _ in self._buffer]
         zero = jax.tree.map(jnp.zeros_like, ups[0].delta)
@@ -256,19 +284,27 @@ class AsyncOrchestrator:
         staleness = jnp.asarray(stal + [0] * pad, jnp.float32)
         losses = jnp.asarray([u.loss for u in ups] + [0.0] * pad, jnp.float32)
         mask = jnp.asarray([1.0] * len(ups) + [0.0] * pad, jnp.float32)
-        return stacked, weights, staleness, losses, mask, stal, ups
+        ids = jnp.arange(K, dtype=jnp.int32)
+        return stacked, weights, staleness, losses, mask, ids, stal, ups
 
     def _do_commit(self, params, server_state, at_time: float,
                    timeout: bool = False):
-        (stacked, weights, staleness, losses, mask, stal,
+        (stacked, weights, staleness, losses, mask, ids, stal,
          ups) = self._stack_buffer()
         self.jrng, r = jax.random.split(self.jrng)
+        alpha = self._alpha
         params, server_state, metrics = self._commit_step(
             params, server_state, stacked, weights, staleness, losses, mask,
-            r)
+            ids, jnp.float32(alpha), r)
         self.version += 1
         self.fault_injector.step_round()
         self.updates_applied += len(ups)
+        delta_norm = float(metrics["delta_norm"])
+        if self._staleness_ctrl is not None:
+            # feed the controller AFTER the commit: alpha moves for the next
+            # one, deterministically from observed staleness + norm drift
+            self._alpha = self._staleness_ctrl.update(stal, delta_norm)
+        down_b, up_b = self._payload_bytes_cache(params)
         losses = [u.loss for u in ups if np.isfinite(u.loss)]
         rec = [u.recovery_s for u in ups if u.retries]
         log = CommitLog(
@@ -276,10 +312,13 @@ class AsyncOrchestrator:
             mean_staleness=float(np.mean(stal)) if stal else 0.0,
             max_staleness=int(max(stal)) if stal else 0,
             client_loss=float(np.mean(losses)) if losses else float("nan"),
-            delta_norm=float(metrics["delta_norm"]),
+            delta_norm=delta_norm,
             bytes_up=self._buffer_bytes, timeout_commit=timeout,
             n_recovered=len(rec),
-            recovery_time_s=float(np.mean(rec)) if rec else 0.0)
+            recovery_time_s=float(np.mean(rec)) if rec else 0.0,
+            staleness_alpha=alpha,
+            mask_overhead_bytes=(up_b - down_b) * len(ups)
+            if self.fl.secure_agg else 0)
         if self.eval_fn and (self.version % self.eval_every == 0):
             log.eval_metric = float(self.eval_fn(params))
         self.logs.append(log)
@@ -361,15 +400,16 @@ class AsyncOrchestrator:
                     self.recovery_time_total += upd.recovery_s
                 # the client transmitted regardless of what the server does
                 # with the update — dropped-as-stale still paid the uplink
-                upd_bytes = self._payload_bytes_cache(params)
-                self.comm.log(self.version, upd.cid, "up", upd_bytes,
+                # (the MASKED wire size under secure_agg)
+                up_bytes = self._payload_bytes_cache(params)[1]
+                self.comm.log(self.version, upd.cid, "up", up_bytes,
                               link_for_site(client.site))
                 staleness = self.version - upd.dispatch_version
                 if staleness > self.async_cfg.max_staleness:
                     self.dropped_stale += 1
                 else:
                     self._buffer.append((upd, t))
-                    self._buffer_bytes += upd_bytes
+                    self._buffer_bytes += up_bytes
             if len(self._buffer) >= self.async_cfg.buffer_size:
                 params, server_state = self._do_commit(params, server_state, t)
                 if verbose and self.logs:

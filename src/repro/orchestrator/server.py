@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.comm.transport import CommAccountant, link_for_site
 from repro.core.compression import payload_bytes
+from repro.core.secure_agg import masked_payload_bytes
 from repro.core.convergence import ConvergenceMonitor
 from repro.core.round import FLConfig, build_fl_round_step
 from repro.optim import get_client_optimizer, get_server_optimizer
@@ -92,9 +93,9 @@ class Orchestrator:
         clients = [self.fleet[c] for c in selected]
 
         # --- simulate system behaviour (host-side) ---
-        upd_bytes = self._payload_bytes_cache(params)
+        down_bytes, up_bytes = self._payload_bytes_cache(params)
         times = simulate_round_times(clients, self.flops_per_client_round,
-                                     upd_bytes, self.rng, self.straggler)
+                                     up_bytes, self.rng, self.straggler)
         mask, duration = apply_mitigation(times, self.straggler)
         self.fault_injector.step_round()
         mask = mask * self.fault_injector.survive_mask(clients)
@@ -116,10 +117,10 @@ class Orchestrator:
         bytes_up = 0
         for ci, c in enumerate(clients):
             link = link_for_site(c.site)
-            self.comm.log(rnd, c.cid, "down", upd_bytes, link)
+            self.comm.log(rnd, c.cid, "down", down_bytes, link)
             if mask[ci] > 0:
-                t = self.comm.log(rnd, c.cid, "up", upd_bytes, link)
-                bytes_up += upd_bytes
+                t = self.comm.log(rnd, c.cid, "up", up_bytes, link)
+                bytes_up += up_bytes
             c.record(mask[ci] > 0, float(times[ci]), rnd)
         self.virtual_clock += duration
 
@@ -133,8 +134,14 @@ class Orchestrator:
         return params, server_state, log
 
     def _payload_bytes_cache(self, params):
+        """(down_bytes, up_bytes): under secure_agg the uplink is the
+        MASKED update — dense f32, compression savings don't survive the
+        additive masks — while the params downlink stays plain."""
         if not hasattr(self, "_pb"):
-            self._pb = payload_bytes(params, self.fl.compression)
+            down = payload_bytes(params, self.fl.compression)
+            up = (masked_payload_bytes(params) if self.fl.secure_agg
+                  else down)
+            self._pb = (down, up)
         return self._pb
 
     def run(self, params, num_rounds: int, server_state=None,

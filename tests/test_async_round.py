@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (AsyncConfig, CompressionConfig, FLConfig,
+from repro.core import (AdaptiveStalenessController, AsyncConfig,
+                        CompressionConfig, FLConfig,
                         build_buffer_commit_step, build_client_update_step,
                         build_fl_round_step, staleness_weights)
 from repro.models import build_model
@@ -53,13 +54,17 @@ def test_zero_exponent_disables_discount():
 
 # ------------------------------------------------------------- commit step
 def _commit(fl, acfg, params, deltas, weights, staleness, mask, rng=None,
-            losses=None):
+            losses=None, exponent=None):
     sopt = get_server_optimizer("fedavg")
     step = jax.jit(build_buffer_commit_step(sopt, fl, acfg))
     if losses is None:
         losses = jnp.zeros_like(weights)
+    K = weights.shape[0]
+    if exponent is None:
+        exponent = acfg.initial_exponent()
     return step(params, sopt.init(params), deltas, weights, staleness,
-                losses, mask,
+                losses, mask, jnp.arange(K, dtype=jnp.int32),
+                jnp.float32(exponent),
                 rng if rng is not None else jax.random.PRNGKey(0))
 
 
@@ -191,7 +196,8 @@ def test_zero_staleness_commit_equals_sync_round(setup):
     commit = jax.jit(build_buffer_commit_step(
         sopt, fl, AsyncConfig(buffer_size=C, staleness_exponent=0.5)))
     p_async, _, _ = commit(params, (), stacked, weights, jnp.zeros(C),
-                           jnp.zeros(C), mask, rng)
+                           jnp.zeros(C), mask, jnp.arange(C, dtype=jnp.int32),
+                           jnp.float32(0.5), rng)
     for a, b_ in zip(jax.tree.leaves(p_sync), jax.tree.leaves(p_async)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                    rtol=1e-5, atol=1e-5)
@@ -212,6 +218,7 @@ def test_commit_applies_compression_pipeline(setup):
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
     acfg = AsyncConfig(buffer_size=C)
     args = (stacked, jnp.ones(C), jnp.zeros(C), jnp.zeros(C), jnp.ones(C),
+            jnp.arange(C, dtype=jnp.int32), jnp.float32(0.5),
             jax.random.PRNGKey(3))
     p_raw, _, _ = jax.jit(build_buffer_commit_step(sopt, fl, acfg))(
         params, (), *args)
@@ -224,3 +231,77 @@ def test_commit_applies_compression_pipeline(setup):
            for a, b_, c in zip(jax.tree.leaves(p_raw), jax.tree.leaves(p_q),
                                jax.tree.leaves(params))]
     assert max(rel) < 0.1                     # but a faithful approximation
+
+
+# ------------------------------------------------- adaptive staleness alpha
+def test_constant_exponent_stays_the_default():
+    """Satellite pin: the constant discount path is the default and its
+    math is the documented 1/(1+s)^a (the NumPy-reference tests above pin
+    the commit output for it)."""
+    acfg = AsyncConfig()
+    assert acfg.staleness_exponent == 0.5
+    assert not acfg.adaptive_staleness
+    assert acfg.initial_exponent() == pytest.approx(0.5)
+
+
+def test_adaptive_exponent_accepted_and_validated():
+    assert AsyncConfig(staleness_exponent="adaptive").adaptive_staleness
+    with pytest.raises(ValueError, match="adaptive"):
+        AsyncConfig(staleness_exponent="bogus")
+    with pytest.raises(ValueError):
+        AsyncConfig(staleness_exponent=-0.1)
+
+
+def test_adaptive_controller_tracks_tail_staleness():
+    """High observed tail staleness -> gentler exponent (slow sites keep
+    contributing); near-fresh buffers -> sharp exponent (stale outliers
+    are discounted hard).  Deterministic given the same observations."""
+    fresh, stale = AdaptiveStalenessController(), AdaptiveStalenessController()
+    for _ in range(20):
+        a_fresh = fresh.update([0, 0, 1], delta_norm=1.0)
+        a_stale = stale.update([10, 20, 40], delta_norm=1.0)
+    assert a_fresh > a_stale
+    # converged value matches the documented rule a = ln(1/w_floor)/ln(1+p90)
+    p90 = float(np.quantile([10, 20, 40], 0.9))
+    want = np.log(1 / stale.w_floor) / np.log1p(stale._stale_p90)
+    assert a_stale == pytest.approx(want, rel=1e-6)
+    assert stale._stale_p90 <= p90
+    # determinism: same feed, same alphas
+    again = AdaptiveStalenessController()
+    for _ in range(20):
+        a2 = again.update([10, 20, 40], delta_norm=1.0)
+    assert a2 == a_stale
+
+
+def test_adaptive_controller_norm_drift_brake():
+    """A rising committed-step norm tightens the discount."""
+    calm, drifty = AdaptiveStalenessController(), AdaptiveStalenessController()
+    for i in range(10):
+        a_calm = calm.update([4, 6, 8], delta_norm=1.0)
+        a_drift = drifty.update([4, 6, 8], delta_norm=1.0 + 0.5 * i)
+    assert a_drift > a_calm
+
+
+def test_adaptive_controller_state_roundtrip():
+    src = AdaptiveStalenessController()
+    for _ in range(5):
+        src.update([3, 7], delta_norm=2.0)
+    dst = AdaptiveStalenessController()
+    dst.set_state(src.state())
+    assert dst.update([5, 9], 2.5) == src.update([5, 9], 2.5)
+
+
+def test_commit_exponent_is_a_runtime_scalar():
+    """The same compiled commit step serves different alphas (the adaptive
+    controller moves it between commits without recompiling)."""
+    K = 3
+    params = {"x": jnp.zeros((4,), jnp.float32)}
+    d = {"x": jnp.ones((K, 4), jnp.float32)}
+    fl = FLConfig(mode="async")
+    acfg = AsyncConfig(buffer_size=K, staleness_exponent="adaptive")
+    s = 4.0
+    for a in (0.0, 0.5, 2.0):
+        p, _, _ = _commit(fl, acfg, params, d, jnp.ones(K), jnp.full(K, s),
+                          jnp.ones(K), exponent=a)
+        np.testing.assert_allclose(np.asarray(p["x"]),
+                                   (1.0 + s) ** (-a), rtol=1e-5)

@@ -1,11 +1,14 @@
-"""Secure aggregation properties: mask cancellation, privacy of individual
-updates, dropout unwinding."""
+"""Secure aggregation properties under the commit-keyed pairwise masking
+scheme: mask cancellation, privacy of individual updates, dropout/padding
+unwinding, commit-key freshness, and jit-compatibility of the vectorised
+masking path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.secure_agg import (aggregate_masked, mask_update,
-                                   pairwise_seeds, secure_weighted_mean)
+from repro.core.secure_agg import (aggregate_masked, commit_key, mask_batch,
+                                   mask_update, masked_payload_bytes,
+                                   pair_mask, secure_weighted_mean)
 
 
 def updates(C=4, shape=(8, 16), seed=0):
@@ -17,12 +20,11 @@ def updates(C=4, shape=(8, 16), seed=0):
 def test_masks_cancel_exactly():
     C = 4
     ups = updates(C)
-    seeds = pairwise_seeds(7, C)
+    key = commit_key(7)
+    ids = jnp.arange(C, dtype=jnp.int32)
     part = jnp.ones((C,))
-    masked = [mask_update(jax.tree.map(lambda x: x[i], ups), i, seeds, part)
-              for i in range(C)]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masked)
-    got = aggregate_masked(stacked, part)
+    masked = mask_batch(ups, key, ids, part)
+    got = aggregate_masked(masked, part)
     want = jax.tree.map(lambda x: x.sum(0), ups)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
@@ -31,9 +33,10 @@ def test_masks_cancel_exactly():
 def test_individual_updates_are_hidden():
     C = 4
     ups = updates(C)
-    seeds = pairwise_seeds(11, C)
+    key = commit_key(11)
+    ids = jnp.arange(C, dtype=jnp.int32)
     part = jnp.ones((C,))
-    masked0 = mask_update(jax.tree.map(lambda x: x[0], ups), 0, seeds, part)
+    masked0 = mask_update(jax.tree.map(lambda x: x[0], ups), 0, key, ids, part)
     # the masked update must differ substantially from the raw one
     raw0 = jax.tree.map(lambda x: x[0], ups)
     for m, r in zip(jax.tree.leaves(masked0), jax.tree.leaves(raw0)):
@@ -44,28 +47,114 @@ def test_dropout_unwinding():
     """Masks between pairs where one side dropped must not corrupt the sum."""
     C = 5
     ups = updates(C, seed=3)
-    seeds = pairwise_seeds(13, C)
+    key = commit_key(13)
+    ids = jnp.arange(C, dtype=jnp.int32)
     part = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0])
-    masked = [mask_update(jax.tree.map(lambda x: x[i], ups), i, seeds, part)
-              for i in range(C)]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *masked)
-    got = aggregate_masked(stacked, part)
+    masked = mask_batch(ups, key, ids, part)
+    got = aggregate_masked(masked, part)
     want = jax.tree.map(
         lambda x: (x * part.reshape((-1,) + (1,) * (x.ndim - 1))).sum(0), ups)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
 
 
+def test_nonparticipating_pair_masks_never_enter_the_sum():
+    """Unit pin of the seed-reveal unwinding: slot i's total mask with slot
+    j dropped equals the manual sum of its pair masks over PARTICIPATING
+    peers only — the (i, j) pair mask is exactly absent, not merely
+    cancelled."""
+    C, shape = 5, (6, 4)
+    key = commit_key(29)
+    ids = jnp.arange(C, dtype=jnp.int32)
+    part = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0])     # slot 2 dropped
+    zero = {"x": jnp.zeros((C,) + shape, jnp.float32)}
+    masks = mask_batch(zero, key, ids, part)["x"]      # pure mask totals
+    for i in range(C):
+        want = np.zeros(shape, np.float32)
+        if part[i]:
+            for j in range(C):
+                if j == i or not part[j]:
+                    continue          # the dropped peer's mask must be absent
+                sign = 1.0 if i < j else -1.0
+                want += sign * np.asarray(pair_mask(key, ids[i], ids[j],
+                                                    shape))
+        np.testing.assert_allclose(np.asarray(masks[i]), want, rtol=1e-5,
+                                   atol=1e-6)
+    # and the dropped slot's own row is exactly zero
+    np.testing.assert_allclose(np.asarray(masks[2]), 0.0)
+
+
+def test_pair_masks_are_symmetric_and_commit_fresh():
+    """key_ij == key_ji within a commit; a different commit id yields
+    entirely different masks (no cross-commit reuse)."""
+    shape = (8,)
+    k1, k2 = commit_key(3), commit_key(4)
+    m_ij = np.asarray(pair_mask(k1, 0, 5, shape))
+    m_ji = np.asarray(pair_mask(k1, 5, 0, shape))
+    np.testing.assert_allclose(m_ij, m_ji)
+    m_other = np.asarray(pair_mask(k2, 0, 5, shape))
+    assert np.abs(m_ij - m_other).max() > 0.1
+
+
+def test_mask_batch_jits_and_matches_eager():
+    """The vectorised masking path must jit (the old per-pair Python loop
+    did not) and agree with its eager evaluation."""
+    C = 6
+    ups = updates(C, seed=9)
+    key = commit_key(17)
+    ids = jnp.arange(C, dtype=jnp.int32)
+    part = jnp.asarray([1.0, 0.0, 1.0, 1.0, 1.0, 0.0])
+    jitted = jax.jit(mask_batch)(ups, key, ids, part)
+    eager = mask_batch(ups, key, ids, part)
+    for a, b in zip(jax.tree.leaves(jitted), jax.tree.leaves(eager)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
 def test_secure_weighted_mean_matches_plain():
     C = 4
     ups = updates(C, seed=5)
-    seeds = pairwise_seeds(17, C)
+    key = commit_key(19)
     part = jnp.asarray([1.0, 1.0, 1.0, 0.0])
     weights = jnp.asarray([1.0, 2.0, 3.0, 4.0])
-    got = secure_weighted_mean(ups, weights, part, seeds)
+    got = secure_weighted_mean(ups, weights, part, key)
     denom = float((weights * part).sum())
     want = jax.tree.map(
         lambda x: (x * (weights * part).reshape((-1,) + (1,) * (x.ndim - 1))
                    ).sum(0) / denom, ups)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_payload_is_dense_f32():
+    """Masking destroys compression savings: the masked wire size is 4
+    bytes/element regardless of leaf dtype or compression config."""
+    tree = {"a": jnp.zeros((3, 5), jnp.float32),
+            "b": jnp.zeros((7,), jnp.bfloat16)}
+    assert masked_payload_bytes(tree) == (3 * 5 + 7) * 4
+
+
+def test_duplicate_ids_cancel_but_leave_a_privacy_hole():
+    """Regression pin for WHY callers key masks on unique per-commit slot
+    indices.  Cancellation is robust either way (the signed pair
+    coefficients are antisymmetric per slot pair), but two slots sharing
+    an id — a fast client landing two updates in one async commit, under
+    cid keying — derive sign 0 for their mutual pair and exchange NO mask
+    at all: each sees the other's barely-masked residual.  Unique slot
+    ids (``_stack_buffer``'s contract) mask every live pair."""
+    shape = (16,)
+    key = commit_key(23)
+    zero = {"x": jnp.zeros((3,) + shape, jnp.float32)}
+    part = jnp.ones((3,))
+    dup = jnp.asarray([0, 0, 7], jnp.int32)       # one client, two slots
+    m_dup = mask_batch(zero, key, dup, part)["x"]
+    summed = aggregate_masked({"x": m_dup}, part)["x"]
+    np.testing.assert_allclose(np.asarray(summed), 0.0, atol=1e-4)
+    # ... but the duplicate slots carry IDENTICAL mask totals: their mutual
+    # pair is unmasked, so subtracting exposes both raw updates
+    np.testing.assert_allclose(np.asarray(m_dup[0]), np.asarray(m_dup[1]))
+    uniq = jnp.asarray([0, 1, 2], jnp.int32)       # slot-index keying
+    m_uniq = mask_batch(zero, key, uniq, part)["x"]
+    assert float(jnp.abs(m_uniq[0] - m_uniq[1]).max()) > 0.1
+    np.testing.assert_allclose(
+        np.asarray(aggregate_masked({"x": m_uniq}, part)["x"]), 0.0,
+        atol=1e-4)

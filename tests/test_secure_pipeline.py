@@ -1,0 +1,258 @@
+"""End-to-end properties of the composable update pipeline with secure
+aggregation wired through BOTH execution regimes.
+
+The headline property (acceptance criterion): masked aggregation equals
+plain aggregation to <= 1e-5 — for every sync exec mode, and for EVERY
+commit of an async run that includes dropout faults, timeout
+(partial-buffer) commits, and a mid-run kill/--resume.  Compression is
+off in the equality runs so the plain and masked wire payloads coincide
+and the two simulations follow identical event trajectories.
+"""
+import math
+from dataclasses import asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointManager
+from repro.configs import get_config
+from repro.core import (AsyncConfig, FLConfig, build_buffer_commit_step,
+                        build_client_update_step, build_fl_round_step,
+                        build_update_pipeline)
+from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
+from repro.models import build_model
+from repro.models.cnn import CNN, CNNConfig
+from repro.optim import get_client_optimizer, get_server_optimizer
+from repro.orchestrator import (AsyncOrchestrator, FaultConfig, Orchestrator,
+                                StragglerPolicy, make_hybrid_fleet)
+
+C, H, b, S = 4, 2, 2, 16
+CNN_CFG = CNNConfig("tiny-cnn", (28, 28, 1), 9, channels=(4, 8), dense=32)
+SEED, N_CLIENTS = 11, 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("paper-charlm").replace(n_layers=2, d_model=64, d_ff=128,
+                                             n_heads=2, kv_heads=2)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (C, H, b, S + 1), 0,
+                              cfg.vocab, jnp.int32)
+    batches = {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+    return m, params, batches
+
+
+def _round(setup, mask=None, n_pods=1, **kw):
+    m, params, batches = setup
+    fl = FLConfig(num_clients=C, local_steps=H, client_lr=0.1, **kw)
+    step = jax.jit(build_fl_round_step(
+        m.loss_fn, get_client_optimizer("sgd"),
+        get_server_optimizer("fedavg"), fl, n_pods=n_pods))
+    mask = jnp.ones((C,)) if mask is None else mask
+    return step(params, (), batches, jnp.asarray([1.0, 2.0, 3.0, 4.0]),
+                mask, jax.random.PRNGKey(2))
+
+
+def _close(p1, p2, tol=1e-5):
+    for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------- sync exec modes
+@pytest.mark.parametrize("exec_mode,n_pods", [
+    ("parallel", 1), ("sequential", 1), ("pod_sequential", 2),
+    ("parallel", 2),          # hierarchical pod path (masks between pods)
+])
+def test_secure_round_matches_plain_every_exec_mode(setup, exec_mode, n_pods):
+    """Acceptance: --secure-agg changes what the server SEES, never what it
+    LEARNS — masked round == plain round to 1e-5 in every exec mode,
+    including with a dropped-out client (mask-0 pair unwinding)."""
+    kw = dict(client_exec=exec_mode, n_pods=n_pods,
+              hierarchical=(exec_mode == "parallel" and n_pods > 1))
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    p_plain, _, m_plain = _round(setup, mask=mask, **kw)
+    p_sec, _, m_sec = _round(setup, mask=mask, secure_agg=True, **kw)
+    _close(p_plain, p_sec)
+    np.testing.assert_allclose(float(m_plain["client_loss"]),
+                               float(m_sec["client_loss"]), rtol=1e-6)
+
+
+def test_secure_rejects_trimmed_mean():
+    with pytest.raises(ValueError, match="trimmed_mean"):
+        build_update_pipeline(FLConfig(aggregation="trimmed_mean",
+                                       secure_agg=True))
+
+
+# ------------------------------------------- sync/async secure equivalence
+def test_zero_staleness_secure_commit_equals_secure_sync_round(setup):
+    """Acceptance: zero-staleness secure async still matches the sync round
+    step — masking composes with the regime equivalence invariant."""
+    m, params, batches = setup
+    fl = FLConfig(num_clients=C, local_steps=H, client_lr=0.1,
+                  secure_agg=True)
+    copt, sopt = get_client_optimizer("sgd"), get_server_optimizer("fedavg")
+    sync_step = jax.jit(build_fl_round_step(m.loss_fn, copt, sopt, fl))
+    weights, mask = jnp.ones((C,)), jnp.ones((C,))
+    rng = jax.random.PRNGKey(2)
+    p_sync, _, _ = sync_step(params, (), batches, weights, mask, rng)
+
+    client_step = jax.jit(build_client_update_step(m.loss_fn, copt, fl))
+    rngs = jax.random.split(rng, C)
+    deltas = [client_step(params, jax.tree.map(lambda x: x[c], batches),
+                          rngs[c])[0] for c in range(C)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    commit = jax.jit(build_buffer_commit_step(
+        sopt, fl, AsyncConfig(buffer_size=C)))
+    p_async, _, _ = commit(params, (), stacked, weights, jnp.zeros(C),
+                           jnp.zeros(C), mask,
+                           jnp.arange(C, dtype=jnp.int32),
+                           jnp.float32(0.5), rng)
+    _close(p_sync, p_async)
+
+
+# ---------------------------------------------------- orchestrated regimes
+def make_async(secure, mgr=None, checkpoint_every=0, timeout=0.15,
+               faults=None, seed=SEED, staleness_exponent=0.5):
+    # timeout=0.15 sim-s vs a ~0.3 s/commit cadence: most commits flush a
+    # PARTIAL buffer (mask-0 padded slots), a few still fill all K slots
+    data = medmnist_like(n=400, seed=seed)
+    parts = partition_dirichlet(data.y, N_CLIENTS, alpha=0.5, seed=seed)
+    fed = FederatedDataset(data, parts, seed=seed)
+    model = CNN(CNN_CFG)
+    params = model.init(jax.random.PRNGKey(seed))
+    fleet = make_hybrid_fleet(N_CLIENTS // 2, N_CLIENTS - N_CLIENTS // 2,
+                              seed=seed, data_sizes=[len(p) for p in parts])
+    orch = AsyncOrchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn,
+        fl=FLConfig(mode="async", num_clients=N_CLIENTS, local_steps=1,
+                    client_lr=0.05, secure_agg=secure),
+        async_cfg=AsyncConfig(buffer_size=3, commit_timeout_s=timeout,
+                              max_concurrency=4, max_staleness=6,
+                              staleness_exponent=staleness_exponent),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        faults=faults or FaultConfig(dropout_prob=0.25),
+        batch_size=8, flops_per_client_round=2e12,
+        checkpoint_mgr=mgr, checkpoint_every=checkpoint_every, seed=seed)
+    return orch, params
+
+
+def test_async_masked_equals_plain_every_commit():
+    """The acceptance property: an async run with dropout faults and
+    timeout (partial-buffer) commits produces, commit for commit, the
+    same aggregation masked as plain — identical commit metadata, equal
+    delta norms, final params within 1e-5."""
+    o_plain, p0 = make_async(secure=False)
+    o_sec, _ = make_async(secure=True)
+    p_plain, _ = o_plain.run(p0, num_commits=8)
+    p_sec, _ = o_sec.run(p0, num_commits=8)
+    assert len(o_plain.logs) == len(o_sec.logs) >= 8
+    assert any(l.timeout_commit for l in o_plain.logs), \
+        "fixture must exercise partial-buffer timeout commits"
+    assert o_plain.lost_to_faults > 0, "fixture must exercise dropouts"
+    for lp, ls in zip(o_plain.logs, o_sec.logs):
+        assert (lp.commit, lp.n_updates, lp.timeout_commit,
+                lp.mean_staleness) == \
+               (ls.commit, ls.n_updates, ls.timeout_commit,
+                ls.mean_staleness)
+        if math.isfinite(lp.delta_norm):
+            np.testing.assert_allclose(lp.delta_norm, ls.delta_norm,
+                                       rtol=1e-4, atol=1e-6)
+    assert all(l.mask_overhead_bytes == 0 for l in o_plain.logs)
+    _close(p_plain, p_sec)
+
+
+def test_async_secure_kill_resume_stays_on_trajectory(tmp_path):
+    """Mask state survives kill/--resume: a secure run killed mid-stream
+    and restored replays the straight secure run bit-for-bit (commit log
+    + params), which in turn matches the plain run to 1e-5."""
+    straight, p0 = make_async(secure=True)
+    p_straight, _ = straight.run(p0, num_commits=6)
+
+    mgr = AsyncCheckpointManager(str(tmp_path / "ck"))
+    killed, _ = make_async(secure=True, mgr=mgr)
+    killed.run(p0, num_commits=3)            # terminal snapshot at commit 3
+
+    resumed, _ = make_async(secure=True, mgr=mgr)
+    p_mid, ss = mgr.restore_async(resumed, p0)
+    assert resumed.version == 3
+    p_res, _ = resumed.run(p_mid, num_commits=6, server_state=ss)
+
+    def norm(d):
+        return {k: ("nan" if isinstance(v, float) and math.isnan(v) else v)
+                for k, v in d.items()}
+
+    assert [norm(asdict(l)) for l in resumed.logs] == \
+           [norm(asdict(l)) for l in straight.logs]
+    _close(p_res, p_straight, tol=1e-7)
+
+    plain, _ = make_async(secure=False)
+    p_plain, _ = plain.run(p0, num_commits=6)
+    _close(p_res, p_plain)
+
+
+def test_async_adaptive_alpha_moves_and_is_logged():
+    """staleness_exponent='adaptive' runs green end to end; the logged
+    alpha starts at the controller's init and then tracks observations."""
+    o2, p0 = make_async(secure=False, faults=FaultConfig(),
+                        staleness_exponent="adaptive")
+    o2.run(p0, num_commits=6)
+    alphas = [l.staleness_alpha for l in o2.logs]
+    assert alphas[0] == pytest.approx(0.5)      # controller init
+    assert len(set(round(a, 6) for a in alphas)) > 1   # it actually adapts
+
+
+def test_sync_orchestrator_secure_matches_plain():
+    """--secure-agg in --mode sync: same fleet/seed, masked vs plain, equal
+    params after 3 barrier rounds."""
+    def make(secure):
+        data = medmnist_like(n=400, seed=SEED)
+        parts = partition_dirichlet(data.y, N_CLIENTS, alpha=0.5, seed=SEED)
+        fed = FederatedDataset(data, parts, seed=SEED)
+        model = CNN(CNN_CFG)
+        params = model.init(jax.random.PRNGKey(SEED))
+        fleet = make_hybrid_fleet(N_CLIENTS // 2, N_CLIENTS // 2, seed=SEED,
+                                  data_sizes=[len(p) for p in parts])
+        orch = Orchestrator(
+            fleet=fleet, fed_data=fed, loss_fn=model.loss_fn,
+            fl=FLConfig(num_clients=4, local_steps=1, client_lr=0.05,
+                        secure_agg=secure),
+            straggler=StragglerPolicy(contention_sigma=0.5),
+            batch_size=8, flops_per_client_round=2e12, seed=SEED)
+        return orch, params
+
+    o_plain, p0 = make(False)
+    o_sec, _ = make(True)
+    p_plain, _ = o_plain.run(p0, 3)
+    p_sec, _ = o_sec.run(p0, 3)
+    _close(p_plain, p_sec)
+    assert [l.bytes_up for l in o_plain.logs] == \
+           [l.bytes_up for l in o_sec.logs]    # compression off: same wire
+
+
+def test_pre_secure_era_checkpoint_still_restores(tmp_path):
+    """Checkpoints written before the secure-agg/adaptive-alpha fields
+    existed (PR 3 format) must still restore into a plain constant-
+    exponent orchestrator — the loader defaults the missing keys."""
+    import json
+    mgr = AsyncCheckpointManager(str(tmp_path / "ck"))
+    writer, p0 = make_async(secure=False, mgr=mgr, faults=FaultConfig())
+    writer.run(p0, num_commits=2)
+    step_dir = mgr.step_dir(writer.version)
+    path = step_dir / "async_state.json"
+    state = json.loads(path.read_text())
+    for k in ("alpha", "staleness_ctrl"):      # forge the PR 3 format
+        state.pop(k)
+    for k in ("secure_agg", "staleness_exponent"):
+        state["config"].pop(k)
+    path.write_text(json.dumps(state))
+
+    restored, _ = make_async(secure=False, faults=FaultConfig())
+    p_mid, ss = mgr.restore_async(restored, p0)
+    assert restored.version == 2
+    assert restored._alpha == pytest.approx(0.5)
+    restored.run(p_mid, num_commits=4, server_state=ss)
+    assert restored.version == 4
