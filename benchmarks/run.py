@@ -14,7 +14,7 @@ import traceback
 from pathlib import Path
 
 BENCHES = ["kernel_bench", "table2", "table3", "table4", "table_async",
-           "ablations", "roofline"]
+           "table_sched_backend", "ablations", "roofline"]
 
 
 def main():
@@ -28,13 +28,14 @@ def main():
 
     from benchmarks import (ablations, kernel_bench, table2_accuracy,
                             table3_scalability, table4_communication,
-                            table_async)
+                            table_async, table_sched_backend)
     jobs = {
         "kernel_bench": kernel_bench.main,
         "table2": table2_accuracy.main,
         "table3": table3_scalability.main,
         "table4": table4_communication.main,
         "table_async": table_async.main,
+        "table_sched_backend": table_sched_backend.main,
         "ablations": ablations.main,
     }
     if Path("artifacts/dryrun").exists() and any(

@@ -10,6 +10,27 @@ Demonstrates every §3/§4 component working together:
   * deadline-based cutoff + 20% client dropouts,
   * a cloud-site network partition mid-training,
   * per-link byte/time accounting (Infiniband vs cloud uplink).
+
+Execution backends
+------------------
+Client round times come from a pluggable ``ExecutionBackend``
+(``repro.exec``).  The default ``closed-form`` backend prices compute +
+transfer + lognormal contention analytically.  Pass
+``--exec-backend scheduler`` to ``repro.launch.train`` (or hand the
+orchestrator a ``SchedulerBackend``, as the last section below does) and
+every client attempt is instead dispatched as a real ``JobSpec`` through
+the ``HybridAdapter``: round durations then include SLURM queue waits,
+elastic HPC->cloud overflow, K8s autoscaling, and spot preemptions that
+originate from the K8s adapter's reclaim events.  Queue-wait and
+placement accounting lands in ``RoundLog``/``CommitLog``, e.g.
+
+    PYTHONPATH=src python -m repro.launch.train \\
+        --mode async --exec-backend scheduler --hpc-nodes 8 \\
+        --spot-preempt-per-min 2 --recovery-policy adaptive \\
+        --checkpoint-dir ckpts/sched --resume
+
+resumes bit-identically: the pool (queues, in-flight jobs, autoscale
+level, adapter RNG) is checkpointed with the orchestrator.
 """
 import jax
 import jax.numpy as jnp
@@ -74,3 +95,25 @@ for site in ("hpc", "cloud"):
               f"mean link time {np.mean([r.seconds for r in recs])*1e3:6.1f} ms")
 print(f"\nfinal accuracy {orch.logs[-1].eval_metric:.3f} "
       f"after {orch.virtual_clock:.0f} simulated seconds")
+
+# ------------------------------------------------- scheduler-backed timing
+print("\n== same rounds, scheduler-backed execution (queue wait counts) ==")
+from repro.exec import SchedulerBackend
+
+sched_orch = Orchestrator(
+    fleet=make_hybrid_fleet(8, 8, data_sizes=[len(p) for p in parts]),
+    fed_data=fed, loss_fn=model.loss_fn,
+    fl=FLConfig(num_clients=6, local_steps=2, client_lr=0.08,
+                compression=CompressionConfig(quantize_bits=8)),
+    straggler=StragglerPolicy(contention_sigma=0.4),
+    batch_size=16, flops_per_client_round=2e12,
+    backend=SchedulerBackend(HybridAdapter(
+        slurm=SlurmAdapter(total_nodes=2),
+        k8s=K8sAdapter(initial_nodes=2, max_nodes=3,
+                       preempt_prob_per_min=2.0))))
+sched_params = model.init(jax.random.PRNGKey(0))
+sched_orch.run(sched_params, 4, verbose=True)
+for lg in sched_orch.logs:
+    print(f"  round {lg.rnd}: dur={lg.duration_s:6.1f}s "
+          f"queue_wait={lg.mean_queue_wait_s:5.1f}s "
+          f"overflowed={lg.n_overflow} preempted={lg.n_preempted}")

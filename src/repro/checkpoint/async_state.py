@@ -6,7 +6,9 @@ between two commits it carries a pending-update buffer, an event heap of
 in-flight clients (each holding a trained delta against an old params
 snapshot), four independent RNG streams (dispatch/simulation, jax client
 keys, selection, fault injection), per-client data-sampler generators,
-fleet performance histories, the commit log and comm ledger.  Dropping any
+fleet performance histories, the commit log and comm ledger — and, under
+``--exec-backend scheduler``, the simulated SLURM/K8s pool itself (queued
+and in-flight jobs, autoscale level, adapter RNG streams).  Dropping any
 of it on restore forks the trajectory.
 
 ``AsyncCheckpointManager`` serialises ALL of it:
@@ -47,7 +49,8 @@ from repro.checkpoint.io import (CheckpointManager, _atomic_write, load_pytree,
 
 _UPD_FIELDS = ("seq", "cid", "client_idx", "dispatch_version",
                "dispatch_time", "duration_s", "loss", "weight", "failed",
-               "fault", "steps_done", "retries", "recovery_s")
+               "fault", "steps_done", "retries", "recovery_s",
+               "work_s", "queue_wait_s", "site", "job_id")
 
 
 def _upd_meta(upd) -> dict:
@@ -75,7 +78,12 @@ def async_state_dict(orch) -> tuple[dict, dict]:
                    "n_fleet": len(orch.fleet),
                    "secure_agg": orch.fl.secure_agg,
                    "staleness_exponent":
-                       str(orch.async_cfg.staleness_exponent)},
+                       str(orch.async_cfg.staleness_exponent),
+                   "exec_backend": orch.backend.name},
+        # scheduler state: node pools, queued/in-flight jobs, adapter RNG —
+        # empty for the closed-form backend (its randomness is orch.rng)
+        "backend": orch.backend.state(),
+        "recovery_actions": list(orch._recovery_actions),
         "clock": orch.clock,
         # staleness-discount state: the alpha the NEXT commit will use, plus
         # the adaptive controller's EMAs (None when the exponent is constant)
@@ -122,12 +130,16 @@ def load_async_state(orch, state: dict, deltas: dict):
             or cfg["local_steps"] != orch.fl.local_steps \
             or cfg["n_fleet"] != len(orch.fleet) \
             or cfg.get("secure_agg", False) != orch.fl.secure_agg \
+            or cfg.get("exec_backend", "closed-form") != orch.backend.name \
             or cfg.get("staleness_exponent",
                        str(orch.async_cfg.staleness_exponent)) \
             != str(orch.async_cfg.staleness_exponent):
         raise ValueError(
             f"checkpoint was written by an orchestrator with config {cfg}; "
             f"restore requires an identically configured one")
+    if state.get("backend"):
+        orch.backend.set_state(state["backend"])
+    orch._recovery_actions = list(state.get("recovery_actions", []))
     orch.clock = float(state["clock"])
     orch._alpha = float(state.get("alpha", orch.async_cfg.initial_exponent()))
     if orch._staleness_ctrl is not None and state.get("staleness_ctrl"):
@@ -147,7 +159,8 @@ def load_async_state(orch, state: dict, deltas: dict):
         g.bit_generator.state = s
 
     def mk_upd(meta):
-        upd = PendingUpdate(**{f: meta[f] for f in _UPD_FIELDS})
+        # missing keys (pre-backend-era checkpoints) fall to field defaults
+        upd = PendingUpdate(**{f: meta[f] for f in _UPD_FIELDS if f in meta})
         if meta["has_delta"]:
             upd.delta = deltas[upd.seq]
         return upd

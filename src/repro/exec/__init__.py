@@ -1,0 +1,3 @@
+from repro.exec.backend import (BACKEND_NAMES, ClientExecution,  # noqa: F401
+                                ClosedFormBackend, ExecutionBackend,
+                                SchedulerBackend, make_backend)

@@ -29,9 +29,10 @@ from repro.data import (FederatedDataset, cifar10_like, medmnist_like,
                         shakespeare_like)
 from repro.models import build_model
 from repro.models.cnn import CIFAR_CNN, CNN, MEDMNIST_CNN
+from repro.exec import BACKEND_NAMES, make_backend
 from repro.orchestrator import (AsyncOrchestrator, FaultConfig, Orchestrator,
                                 StragglerPolicy, make_hybrid_fleet)
-from repro.sched import HybridAdapter, JobSpec
+from repro.sched import HybridAdapter, JobSpec, K8sAdapter, SlurmAdapter
 
 
 def _staleness_exp(v: str):
@@ -95,6 +96,24 @@ def main():
     ap.add_argument("--mode", default="sync", choices=["sync", "async"],
                     help="sync: barrier rounds; async: FedBuff buffered "
                          "commits (--rounds then counts server commits)")
+    ap.add_argument("--exec-backend", default="closed-form",
+                    choices=list(BACKEND_NAMES),
+                    help="where simulated client time comes from: "
+                         "'closed-form' (lognormal straggler model, the fast "
+                         "default) or 'scheduler' (dispatch every attempt as "
+                         "a job through the SLURM+K8s hybrid adapter: queue "
+                         "waits, elastic HPC->cloud overflow, and spot "
+                         "preemptions from the K8s adapter's event stream)")
+    ap.add_argument("--hpc-nodes", type=int, default=0,
+                    help="scheduler backend: SLURM partition size "
+                         "(0 = one node per HPC client)")
+    ap.add_argument("--cloud-nodes", type=int, default=0,
+                    help="scheduler backend: K8s autoscale ceiling "
+                         "(0 = one node per cloud client)")
+    ap.add_argument("--spot-preempt-per-min", type=float, default=0.0,
+                    help="scheduler backend: per-minute spot reclaim rate "
+                         "for preemptible pods (replaces the injector's "
+                         "--spot-preempt-prob draw)")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="async: commit every K buffered updates")
     ap.add_argument("--staleness-exp", type=_staleness_exp, default=0.5,
@@ -126,9 +145,11 @@ def main():
     ap.add_argument("--spot-preempt-prob", type=float, default=0.0)
     ap.add_argument("--partition-prob", type=float, default=0.0)
     ap.add_argument("--recovery-policy", default="restart",
-                    choices=["restart", "resume", "discard"],
+                    choices=["restart", "resume", "discard", "adaptive"],
                     help="async: what a preempted/partitioned client does "
-                         "with its interrupted attempt (paper §5.4)")
+                         "with its interrupted attempt (paper §5.4); "
+                         "'adaptive' picks per fault from observed "
+                         "staleness + remaining work")
     ap.add_argument("--recovery-overhead-s", type=float, default=0.0)
     ap.add_argument("--server-opt", default="fedavg",
                     choices=["fedavg", "fedadam", "fedyogi"])
@@ -147,6 +168,25 @@ def main():
 
     fed, model, params, eval_fn = build_task(args.dataset, args.clients_pool,
                                              args.seed)
+    n_hpc = args.clients_pool // 2
+    n_cloud = args.clients_pool - n_hpc
+
+    def build_backend():
+        if args.exec_backend != "scheduler":
+            return make_backend("closed-form")
+        if args.spot_preempt_prob:
+            print("warning: under --exec-backend scheduler spot preemptions "
+                  "originate from the K8s adapter's event stream; the "
+                  "injector's --spot-preempt-prob draw is disabled — use "
+                  "--spot-preempt-per-min to set the reclaim rate")
+        cloud = args.cloud_nodes or n_cloud
+        return make_backend(
+            "scheduler",
+            slurm=SlurmAdapter(total_nodes=args.hpc_nodes or n_hpc,
+                               seed=args.seed),
+            k8s=K8sAdapter(initial_nodes=max(1, cloud // 2), max_nodes=cloud,
+                           preempt_prob_per_min=args.spot_preempt_per_min,
+                           seed=args.seed + 1))
     fl = FLConfig(
         mode=args.mode,
         num_clients=args.clients_per_round, local_steps=args.local_steps,
@@ -155,9 +195,7 @@ def main():
         compression=CompressionConfig(quantize_bits=args.quantize_bits,
                                       topk_frac=args.topk_frac,
                                       dropout_frac=args.fed_dropout))
-    fleet = make_hybrid_fleet(args.clients_pool // 2,
-                              args.clients_pool - args.clients_pool // 2,
-                              seed=args.seed,
+    fleet = make_hybrid_fleet(n_hpc, n_cloud, seed=args.seed,
                               data_sizes=[fed.client_size(c)
                                           for c in range(fed.num_clients)])
     if args.render_jobs:
@@ -188,7 +226,8 @@ def main():
             straggler=StragglerPolicy(), faults=faults,
             batch_size=args.batch_size, flops_per_client_round=3e12,
             eval_fn=eval_fn, eval_every=10, checkpoint_mgr=mgr,
-            checkpoint_every=args.checkpoint_every, seed=args.seed)
+            checkpoint_every=args.checkpoint_every,
+            backend=build_backend(), seed=args.seed)
         server_state = None
         if args.resume and mgr.latest_round() is not None:
             params, server_state = mgr.restore_async(orch, params)
@@ -199,6 +238,7 @@ def main():
                              verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "async",
+            "exec_backend": args.exec_backend,
             "secure_agg": args.secure_agg,
             "mask_overhead_bytes": sum(l.mask_overhead_bytes
                                        for l in orch.logs),
@@ -210,6 +250,12 @@ def main():
             "final_eval": orch.logs[-1].eval_metric if orch.logs else None,
             "virtual_time_s": orch.clock,
             "updates_per_sim_s": orch.updates_per_sim_second,
+            "mean_queue_wait_s": (float(np.mean([l.queue_wait_s
+                                                 for l in orch.logs]))
+                                  if orch.logs else 0.0),
+            "overflow_updates": sum(l.n_overflow for l in orch.logs),
+            "recovery_actions": sum(len(l.recovery_actions)
+                                    for l in orch.logs),
         }
     else:
         mgr = (CheckpointManager(args.checkpoint_dir)
@@ -222,25 +268,39 @@ def main():
             faults=faults,
             batch_size=args.batch_size, flops_per_client_round=3e12,
             eval_fn=eval_fn, eval_every=10, checkpoint_mgr=mgr,
-            checkpoint_every=args.checkpoint_every, seed=args.seed)
+            checkpoint_every=args.checkpoint_every,
+            backend=build_backend(), seed=args.seed)
         server_state, start_round = None, 0
         if args.resume and mgr.latest_round() is not None:
             server_state = orch.init_server_state(params)
             params, server_state, meta = mgr.restore(params, server_state)
             start_round = meta["round"] + 1
             orch.virtual_clock = meta.get("clock", 0.0)
+            if meta.get("exec_backend", "closed-form") != args.exec_backend:
+                raise SystemExit(
+                    f"checkpoint was written under --exec-backend "
+                    f"{meta.get('exec_backend', 'closed-form')}; resume "
+                    f"with the same backend")
+            if meta.get("backend_state"):
+                orch.backend.set_state(meta["backend_state"])
             print(f"resumed sync run at round {start_round} "
                   f"(sim t={orch.virtual_clock:.1f}s)")
         params, _ = orch.run(params, args.rounds, server_state=server_state,
                              start_round=start_round, verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "sync",
+            "exec_backend": args.exec_backend,
             "secure_agg": args.secure_agg,
             "rounds": args.rounds,
             "final_eval": orch.logs[-1].eval_metric if orch.logs else None,
             "virtual_time_s": orch.virtual_clock,
             "mean_bytes_per_client_round":
                 orch.comm.mean_bytes_per_client_round(),
+            "mean_queue_wait_s": (float(np.mean([l.mean_queue_wait_s
+                                                 for l in orch.logs]))
+                                  if orch.logs else 0.0),
+            "overflow_clients": sum(l.n_overflow for l in orch.logs),
+            "preempted_clients": sum(l.n_preempted for l in orch.logs),
         }
     print(json.dumps(summary, indent=1))
 

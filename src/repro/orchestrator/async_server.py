@@ -2,9 +2,11 @@
 
 Replaces the per-round barrier of ``Orchestrator`` with a simulated event
 queue: up to ``max_concurrency`` clients train concurrently, each against
-the params snapshot current at its dispatch; finish times come from
-``simulate_round_times`` (heterogeneous profiles + lognormal contention
-noise), so fast HPC nodes lap slow cloud VMs instead of waiting for them.
+the params snapshot current at its dispatch; finish times come from the
+pluggable ``ExecutionBackend`` (``repro.exec``) — closed-form heterogeneous
+profiles + lognormal contention noise by default, or the SLURM/K8s
+scheduler simulation (queue waits, elastic overflow, adapter-origin spot
+preemptions) — so fast HPC nodes lap slow cloud VMs instead of waiting.
 Updates land in a bounded buffer; the server commits every K arrivals or
 after ``commit_timeout_s`` sim-seconds of buffered quiet, discounting each
 update by its staleness (commits elapsed since dispatch).
@@ -36,7 +38,7 @@ from repro.optim import get_client_optimizer, get_server_optimizer
 from repro.orchestrator.fault import (RECOVERABLE_FAULTS, FaultConfig,
                                       FaultInjector)
 from repro.orchestrator.selection import get_selection
-from repro.orchestrator.straggler import StragglerPolicy, simulate_round_times
+from repro.orchestrator.straggler import StragglerPolicy
 
 
 @dataclass
@@ -56,6 +58,10 @@ class PendingUpdate:
     steps_done: int = 0         # local steps checkpointed before the fault
     retries: int = 0            # recovery attempts consumed so far
     recovery_s: float = 0.0     # arrival delay vs. the fault-free attempt
+    work_s: float = 0.0         # closed-form work (scheduler: sans queue)
+    queue_wait_s: float = 0.0   # time spent queued before the node started
+    site: str = ""              # placement site the attempt ran on
+    job_id: str = ""            # scheduler-backend job backing the attempt
 
 
 @dataclass
@@ -75,6 +81,14 @@ class CommitLog:
     staleness_alpha: float = 0.5       # discount exponent used BY this commit
     mask_overhead_bytes: int = 0       # uplink bytes masking added over the
     #                                    plain (compressed) wire payload
+    queue_wait_s: float = 0.0          # mean scheduler queue wait of the
+    #                                    committed updates (scheduler backend)
+    n_overflow: int = 0                # committed updates that ran off their
+    #                                    home site (elastic HPC->cloud burst)
+    recovery_actions: list = field(default_factory=list)
+    #                                  # "fault:policy" decisions the adaptive
+    #                                    recovery policy took since the
+    #                                    previous commit
 
 
 @dataclass
@@ -96,6 +110,7 @@ class AsyncOrchestrator:
     eval_every: int = 10                   # in commits
     checkpoint_mgr: object = None          # AsyncCheckpointManager (or None)
     checkpoint_every: int = 0              # in commits (0 = only at run end)
+    backend: object = None                 # ExecutionBackend (None -> closed)
     seed: int = 0
 
     def __post_init__(self):
@@ -106,6 +121,12 @@ class AsyncOrchestrator:
                 f"synchronous barrier loop")
         self.rng = np.random.default_rng(self.seed)
         self.jrng = jax.random.PRNGKey(self.seed)
+        if self.backend is None:
+            # local import: repro.exec consumes the straggler model from
+            # this package, so a module-level import would be circular
+            from repro.exec.backend import ClosedFormBackend
+            self.backend = ClosedFormBackend()
+        self.backend.bind(self.rng, self.straggler)
         self.selection = get_selection(self.selection_name, seed=self.seed)
         self.fault_injector = FaultInjector(self.faults, seed=self.seed + 1)
         self.comm = CommAccountant()
@@ -132,6 +153,8 @@ class AsyncOrchestrator:
         self.lost_to_faults = 0       # attempts abandoned (no recovery)
         self.recovery_time_total = 0.0
         self._seq = 0
+        self._recovery_actions: list[str] = []  # adaptive-policy decisions
+        #                               accrued since the last commit
         self._events: list = []       # heap of (arrival_time, seq, PendingUpdate)
         self._inflight: set[int] = set()   # cids currently training
         self._buffer: list[tuple] = []     # [(PendingUpdate, arrival_time)]
@@ -182,35 +205,47 @@ class AsyncOrchestrator:
                           if c.cid == sel[0])
         client = self.fleet[client_idx]
         down_bytes, up_bytes = self._payload_bytes_cache(params)
-        dur = float(simulate_round_times(
-            [client], self.flops_per_client_round, up_bytes, self.rng,
-            self.straggler)[0])
+        ex = self.backend.execute(client, self.flops_per_client_round,
+                                  up_bytes, now)
         # the injector's round clock advances per COMMIT (the async analogue
         # of a round, in _do_commit) so FaultConfig partition probabilities /
         # durations keep their sync-round units; the fault dice — cause and
-        # strike time included — roll per dispatch
-        failed, fault, frac = self.fault_injector.draw_fault(client)
+        # strike time included — roll per dispatch.  When the backend's own
+        # event stream produces spot preemptions, the injector must not also
+        # reclaim the instance.
+        failed, fault, frac = self.fault_injector.draw_fault(
+            client, include_preempt=not self.backend.handles_preemption)
 
         upd = PendingUpdate(seq=self._seq, cid=client.cid,
                             client_idx=client_idx,
                             dispatch_version=self.version,
-                            dispatch_time=now, duration_s=dur, failed=failed,
-                            fault=fault)
-        arrival = now + dur
+                            dispatch_time=now, duration_s=ex.fault_free_s,
+                            failed=failed, fault=fault, work_s=ex.work_s,
+                            queue_wait_s=ex.queue_wait_s, site=ex.site,
+                            job_id=ex.job_id)
+        arrival = now + ex.fault_free_s
         if failed:
-            # the fault strikes at frac of the attempt: the event stream sees
-            # the failure WHEN it happens, not after a phantom full attempt
-            arrival = now + frac * dur
+            # the injector fault strikes at frac of the attempt's node time:
+            # the event stream sees the failure WHEN it happens, not after a
+            # phantom full attempt (queue wait has already been paid)
+            arrival = now + ex.queue_wait_s + frac * ex.full_run_s
             upd.steps_done = int(frac * self.fl.local_steps)
-        if (not failed) or (fault in RECOVERABLE_FAULTS
-                            and self.faults.recovery_policy == "resume"):
+        elif ex.preempted:
+            # scheduler-origin spot reclaim: the strike time comes from the
+            # K8s adapter's event stream, not an injector dice roll
+            upd.failed, upd.fault = True, "preempt"
+            arrival = now + ex.duration_s
+            upd.steps_done = int(ex.frac_done * self.fl.local_steps)
+        if (not upd.failed) or (upd.fault in RECOVERABLE_FAULTS
+                                and self.faults.recovery_policy
+                                in ("resume", "adaptive")):
             # the client trains against the params snapshot it is handed NOW;
             # staleness accrues from commits landing while it runs.  Under
             # the resume policy a preempted/partitioned client keeps a local
             # step checkpoint, so its delta (still vs. this snapshot) is
             # computed up front and survives the fault.
             self._train_client(upd, client, params)
-        link = link_for_site(client.site)
+        link = link_for_site(ex.site or client.site)
         self.comm.log(self.version, client.cid, "down", down_bytes, link)
         self._inflight.add(client.cid)
         heapq.heappush(self._events, (arrival, self._seq, upd))
@@ -218,47 +253,94 @@ class AsyncOrchestrator:
         return True
 
     # ------------------------------------------------------------- recovery
+    def _choose_recovery(self, upd: PendingUpdate, t: float) -> str:
+        """Adaptive per-fault policy: pick restart/resume/discard online from
+        the update's observed staleness and its remaining work.
+
+        * discard — the recovered update would exceed ``max_staleness``
+          anyway (already stale, or projected to be stale by the time the
+          remaining work lands at the observed commit rate);
+        * resume  — most of the work is already checkpointed locally, so
+          finishing it is cheaper than a fresh attempt;
+        * restart — most of the attempt is lost; retrying against the
+          CURRENT params also resets the accrued staleness."""
+        L = max(self.fl.local_steps, 1)
+        remaining_frac = (L - upd.steps_done) / L
+        base = upd.work_s or upd.duration_s
+        remaining_s = (base * remaining_frac
+                       + self.faults.recovery_overhead_s)
+        staleness_now = self.version - upd.dispatch_version
+        commit_rate = self.version / self.clock if self.clock > 0 else 0.0
+        projected = staleness_now + commit_rate * remaining_s
+        if projected > self.async_cfg.max_staleness:
+            return "discard"
+        return "resume" if remaining_frac <= 0.5 else "restart"
+
     def _handle_fault_arrival(self, upd: PendingUpdate, t: float, params):
         """A fault just struck ``upd``'s client at sim-time ``t``.
 
         Returns True when a recovery attempt was scheduled (the slot stays
         busy); False when the attempt's work is lost and the slot frees."""
         client = self.fleet[upd.client_idx]
+        # the faulted attempt's backing job produces nothing further
+        self.backend.release(upd.job_id, t)
+        upd.job_id = ""
         policy = self.faults.recovery_policy
+        if (policy == "adaptive" and upd.fault in RECOVERABLE_FAULTS
+                and upd.retries < self.faults.max_retries):
+            policy = self._choose_recovery(upd, t)
+            self._recovery_actions.append(f"{upd.fault}:{policy}")
         if (upd.fault not in RECOVERABLE_FAULTS or policy == "discard"
                 or upd.retries >= self.faults.max_retries):
             return False
         L = max(self.fl.local_steps, 1)
+        start = t + self.faults.recovery_overhead_s
         if policy == "restart":
             # retry from scratch against the CURRENT global params: fresh
             # downlink, fresh batches, staleness resets to the live version
             upd.steps_done = 0
             down_bytes, up_bytes = self._payload_bytes_cache(params)
-            attempt = float(simulate_round_times(
-                [client], self.flops_per_client_round, up_bytes, self.rng,
-                self.straggler)[0])
+            ex = self.backend.execute(client, self.flops_per_client_round,
+                                      up_bytes, start)
             # duration_s is the recovery baseline: the fault-free duration of
             # the attempt that will actually land.  The retry redraws its
-            # contention noise, so rebase — otherwise a lucky short retry
-            # yields a NEGATIVE recovery time against the first attempt's draw
-            upd.duration_s = attempt
+            # contention noise (and re-queues under the scheduler backend),
+            # so rebase — otherwise a lucky short retry yields a NEGATIVE
+            # recovery time against the first attempt's draw
+            upd.duration_s = ex.fault_free_s
+            upd.work_s, upd.queue_wait_s = ex.work_s, ex.queue_wait_s
             self._train_client(upd, client, params)
             upd.dispatch_version = self.version
             self.comm.log(self.version, client.cid, "down", down_bytes,
-                          link_for_site(client.site))
+                          link_for_site(ex.site or client.site))
         else:  # resume: re-run only the steps after the local checkpoint
-            attempt = upd.duration_s * (L - upd.steps_done) / L
-        start = t + self.faults.recovery_overhead_s
-        failed, fault, frac = self.fault_injector.draw_fault(client)
+            base = upd.work_s or upd.duration_s
+            ex = self.backend.resume(client,
+                                     base * (L - upd.steps_done) / L, start)
+        upd.site, upd.job_id = (ex.site or upd.site), ex.job_id
+        failed, fault, frac = self.fault_injector.draw_fault(
+            client, include_preempt=not self.backend.handles_preemption)
         upd.retries += 1
-        if failed and attempt > 0:
+        if failed and ex.full_run_s > 0:
             upd.failed, upd.fault = True, fault
             if policy == "resume":
                 upd.steps_done += int(frac * (L - upd.steps_done))
-            heapq.heappush(self._events, (start + frac * attempt, upd.seq, upd))
+            heapq.heappush(self._events,
+                           (start + ex.queue_wait_s + frac * ex.full_run_s,
+                            upd.seq, upd))
+        elif ex.preempted:
+            # the scheduler reclaimed the RETRY's spot instance too
+            upd.failed, upd.fault = True, "preempt"
+            if policy == "resume":
+                upd.steps_done += int(ex.frac_done * (L - upd.steps_done))
+            else:
+                upd.steps_done = int(ex.frac_done * L)
+            heapq.heappush(self._events,
+                           (start + ex.duration_s, upd.seq, upd))
         else:
             upd.failed, upd.fault = False, ""
-            heapq.heappush(self._events, (start + attempt, upd.seq, upd))
+            heapq.heappush(self._events,
+                           (start + ex.duration_s, upd.seq, upd))
         return True
 
     # --------------------------------------------------------------- commit
@@ -318,7 +400,14 @@ class AsyncOrchestrator:
             recovery_time_s=float(np.mean(rec)) if rec else 0.0,
             staleness_alpha=alpha,
             mask_overhead_bytes=(up_b - down_b) * len(ups)
-            if self.fl.secure_agg else 0)
+            if self.fl.secure_agg else 0,
+            queue_wait_s=(float(np.mean([u.queue_wait_s for u in ups]))
+                          if ups else 0.0),
+            n_overflow=sum(1 for u in ups
+                           if u.site and u.site
+                           != self.fleet[u.client_idx].site),
+            recovery_actions=self._recovery_actions)
+        self._recovery_actions = []
         if self.eval_fn and (self.version % self.eval_every == 0):
             log.eval_metric = float(self.eval_fn(params))
         self.logs.append(log)
@@ -400,10 +489,12 @@ class AsyncOrchestrator:
                     self.recovery_time_total += upd.recovery_s
                 # the client transmitted regardless of what the server does
                 # with the update — dropped-as-stale still paid the uplink
-                # (the MASKED wire size under secure_agg)
+                # (the MASKED wire size under secure_agg), over the link of
+                # the site the attempt was PLACED on (overflowed HPC jobs
+                # upload from the cloud)
                 up_bytes = self._payload_bytes_cache(params)[1]
                 self.comm.log(self.version, upd.cid, "up", up_bytes,
-                              link_for_site(client.site))
+                              link_for_site(upd.site or client.site))
                 staleness = self.version - upd.dispatch_version
                 if staleness > self.async_cfg.max_staleness:
                     self.dropped_stale += 1

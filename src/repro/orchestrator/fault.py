@@ -19,7 +19,11 @@ faults (preempt/partition) are recoverable under ``recovery_policy``:
             partial-progress recovery; staleness keeps accruing from the
             original dispatch),
   discard — the attempt's work is lost and the slot is freed (the pre-PR-3
-            behaviour).
+            behaviour),
+  adaptive — choose restart/resume/discard PER FAULT online from the
+            update's observed staleness and remaining work (discard when the
+            recovered update would exceed max_staleness anyway); the chosen
+            action is logged in ``CommitLog.recovery_actions``.
 """
 from __future__ import annotations
 
@@ -30,7 +34,7 @@ import numpy as np
 from repro.orchestrator.registry import ClientInfo
 
 RECOVERABLE_FAULTS = ("preempt", "partition")
-RECOVERY_POLICIES = ("restart", "resume", "discard")
+RECOVERY_POLICIES = ("restart", "resume", "discard", "adaptive")
 
 
 @dataclass
@@ -39,7 +43,7 @@ class FaultConfig:
     spot_preempt_prob: float = 0.0  # extra dropout for spot instances
     partition_prob: float = 0.0     # whole-site network partition
     partition_len: int = 2          # rounds a partition lasts
-    recovery_policy: str = "restart"   # restart | resume | discard (async)
+    recovery_policy: str = "restart"   # restart|resume|discard|adaptive (async)
     recovery_overhead_s: float = 0.0   # restart/reschedule delay per retry
     max_retries: int = 2               # recovery attempts before giving up
 
@@ -80,29 +84,37 @@ class FaultInjector:
             self._partitioned_site = "cloud" if self.rng.random() < 0.5 else "hpc"
             self._partition_left = self.cfg.partition_len
 
-    def draw_fault(self, c: ClientInfo) -> tuple[bool, str, float]:
+    def draw_fault(self, c: ClientInfo,
+                   include_preempt: bool = True) -> tuple[bool, str, float]:
         """One attempt's fate: ``(failed, kind, frac_completed_at_strike)``.
 
         Same total failure probability as one ``survive_mask`` entry —
         dropout folds in (1 - reliability), spot instances additionally risk
         preemption — but the cause is attributed and a strike time drawn so
         the async event stream reflects WHEN the fault lands, not just that
-        the attempt was doomed at dispatch."""
+        the attempt was doomed at dispatch.
+
+        ``include_preempt=False`` removes the spot-preemption component:
+        used when the execution backend's OWN event stream produces
+        preemptions (``SchedulerBackend.handles_preemption``), so the same
+        spot instance is not reclaimed by two independent processes."""
         if self._partitioned_site and c.site == self._partitioned_site:
             return True, "partition", float(self.rng.uniform(0.05, 0.95))
         p_drop = 1 - (1 - self.cfg.dropout_prob) * c.profile.reliability
-        p_pre = self.cfg.spot_preempt_prob if c.profile.spot else 0.0
+        p_pre = (self.cfg.spot_preempt_prob
+                 if c.profile.spot and include_preempt else 0.0)
         u = self.rng.random()
         if u >= 1 - (1 - p_drop) * (1 - p_pre):
             return False, "", 1.0
         kind = "preempt" if (p_pre and u < p_pre) else "dropout"
         return True, kind, float(self.rng.uniform(0.05, 0.95))
 
-    def survive_mask(self, clients: list[ClientInfo]) -> np.ndarray:
+    def survive_mask(self, clients: list[ClientInfo],
+                     include_preempt: bool = True) -> np.ndarray:
         mask = np.ones(len(clients))
         for i, c in enumerate(clients):
             p = self.cfg.dropout_prob
-            if c.profile.spot:
+            if c.profile.spot and include_preempt:
                 p = 1 - (1 - p) * (1 - self.cfg.spot_preempt_prob)
             p = 1 - (1 - p) * c.profile.reliability
             if self.rng.random() < p:

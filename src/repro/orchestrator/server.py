@@ -4,7 +4,12 @@ accounting and checkpointing wired together.
 
 Host-side only — the heavy math is the jit'd round step from
 repro.core.round; the orchestrator decides *who participates*, charges
-simulated wall-clock/bytes, and manages state across rounds.  It is
+simulated wall-clock/bytes, and manages state across rounds.  WHERE and
+WHEN a client's local training runs comes from the pluggable
+``ExecutionBackend`` (``repro.exec``): the closed-form straggler model by
+default, or the SLURM/K8s scheduler simulation (queue waits, elastic
+HPC→cloud overflow, adapter-origin spot preemptions) under
+``--exec-backend scheduler``.  It is
 deliberately light/stateless-restartable: everything it needs to resume
 lives in the CheckpointManager.
 """
@@ -27,8 +32,7 @@ from repro.optim import get_client_optimizer, get_server_optimizer
 from repro.orchestrator.fault import FaultConfig, FaultInjector
 from repro.orchestrator.registry import ClientInfo
 from repro.orchestrator.selection import get_selection
-from repro.orchestrator.straggler import (StragglerPolicy, apply_mitigation,
-                                          simulate_round_times)
+from repro.orchestrator.straggler import StragglerPolicy, apply_mitigation
 
 
 @dataclass
@@ -41,6 +45,9 @@ class RoundLog:
     delta_norm: float
     bytes_up: int
     eval_metric: float = float("nan")
+    mean_queue_wait_s: float = 0.0     # scheduler backend: PENDING time
+    n_overflow: int = 0                # clients placed off their home site
+    n_preempted: int = 0               # adapter-origin spot reclaims
 
 
 @dataclass
@@ -61,6 +68,7 @@ class Orchestrator:
     eval_every: int = 10
     checkpoint_mgr: object = None
     checkpoint_every: int = 0
+    backend: object = None            # ExecutionBackend (None -> closed form)
     seed: int = 0
 
     def __post_init__(self):
@@ -71,6 +79,12 @@ class Orchestrator:
                 f"for mode='async'")
         self.rng = np.random.default_rng(self.seed)
         self.jrng = jax.random.PRNGKey(self.seed)
+        if self.backend is None:
+            # local import: repro.exec consumes the straggler model from
+            # this package, so a module-level import would be circular
+            from repro.exec.backend import ClosedFormBackend
+            self.backend = ClosedFormBackend()
+        self.backend.bind(self.rng, self.straggler)
         self.selection = get_selection(self.selection_name, seed=self.seed)
         self.fault_injector = FaultInjector(self.faults, seed=self.seed + 1)
         self.comm = CommAccountant()
@@ -94,11 +108,18 @@ class Orchestrator:
 
         # --- simulate system behaviour (host-side) ---
         down_bytes, up_bytes = self._payload_bytes_cache(params)
-        times = simulate_round_times(clients, self.flops_per_client_round,
-                                     up_bytes, self.rng, self.straggler)
+        execs = self.backend.execute_round(
+            clients, self.flops_per_client_round, up_bytes,
+            self.virtual_clock)
+        times = np.asarray([e.duration_s for e in execs])
         mask, duration = apply_mitigation(times, self.straggler)
         self.fault_injector.step_round()
-        mask = mask * self.fault_injector.survive_mask(clients)
+        mask = mask * self.fault_injector.survive_mask(
+            clients, include_preempt=not self.backend.handles_preemption)
+        if self.backend.handles_preemption:
+            # spot reclaims originate from the scheduler's own event stream
+            mask = mask * np.asarray([0.0 if e.preempted else 1.0
+                                      for e in execs])
 
         # --- data + weights ---
         batches = self.fed_data.sample_round(selected, self.fl.local_steps,
@@ -113,23 +134,29 @@ class Orchestrator:
         params, server_state, metrics = self._round_step(
             params, server_state, batches, weights, jmask, r)
 
-        # --- accounting ---
+        # --- accounting (links charged by PLACEMENT site, not home site) ---
         bytes_up = 0
         for ci, c in enumerate(clients):
-            link = link_for_site(c.site)
+            link = link_for_site(execs[ci].site or c.site)
             self.comm.log(rnd, c.cid, "down", down_bytes, link)
             if mask[ci] > 0:
                 t = self.comm.log(rnd, c.cid, "up", up_bytes, link)
                 bytes_up += up_bytes
             c.record(mask[ci] > 0, float(times[ci]), rnd)
         self.virtual_clock += duration
+        # barrier closed: straggler jobs cut by the mitigation are abandoned
+        self.backend.end_round(self.virtual_clock)
 
         log = RoundLog(
             rnd=rnd, selected=selected, participated=int(mask.sum()),
             duration_s=duration,
             client_loss=float(metrics["client_loss"]),
             delta_norm=float(metrics["delta_norm"]),
-            bytes_up=bytes_up)
+            bytes_up=bytes_up,
+            mean_queue_wait_s=float(np.mean([e.queue_wait_s for e in execs]))
+            if execs else 0.0,
+            n_overflow=sum(e.overflowed for e in execs),
+            n_preempted=sum(e.preempted for e in execs))
         self.logs.append(log)
         return params, server_state, log
 
@@ -161,8 +188,11 @@ class Orchestrator:
                       f"eval={log.eval_metric:.4f}")
             if self.checkpoint_mgr and self.checkpoint_every and \
                     rnd % self.checkpoint_every == 0:
-                self.checkpoint_mgr.save(rnd, params, server_state,
-                                         {"clock": self.virtual_clock})
+                self.checkpoint_mgr.save(
+                    rnd, params, server_state,
+                    {"clock": self.virtual_clock,
+                     "exec_backend": self.backend.name,
+                     "backend_state": self.backend.state()})
             if monitor and monitor.update(log.delta_norm):
                 break
         return params, server_state

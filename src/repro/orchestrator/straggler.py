@@ -40,9 +40,14 @@ def apply_mitigation(times: np.ndarray, policy: StragglerPolicy):
     mask = np.ones_like(times)
     duration = times.max() if len(times) else 0.0
     if policy.fastest_k and policy.fastest_k < len(times):
-        kth = np.partition(times, policy.fastest_k - 1)[policy.fastest_k - 1]
-        mask = (times <= kth).astype(np.float64)
-        duration = kth
+        # exactly-k semantics: a `times <= kth` threshold admits every
+        # client tied at the k-th time, so ties could over-fill the round.
+        # Stable argsort keeps exactly k, breaking ties by client position.
+        k = policy.fastest_k
+        fastest = np.argsort(times, kind="stable")[:k]
+        mask = np.zeros_like(times)
+        mask[fastest] = 1.0
+        duration = times[fastest].max()
     if policy.deadline_s:
         dl_mask = (times <= policy.deadline_s).astype(np.float64)
         mask = mask * dl_mask

@@ -1,10 +1,13 @@
 """SLURM adapter: renders real sbatch scripts; simulates a partition with a
-fixed node pool and FIFO + backfill-ish start policy."""
+fixed node pool and a strict-FIFO start policy.
+
+Queue noise (shared-filesystem / co-tenant jitter) is a single lognormal
+factor drawn per job at submit time — not re-drawn every clock tick — so a
+job's runtime is fixed the moment it is submitted and replays identically
+from a checkpoint."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.sched.adapter import JobHandle, JobSpec, JobState, SchedulerAdapter
+from repro.sched.adapter import JobHandle, JobSpec, SchedulerAdapter
 
 SBATCH_TEMPLATE = """#!/bin/bash
 #SBATCH --job-name={name}
@@ -24,12 +27,11 @@ class SlurmAdapter(SchedulerAdapter):
 
     def __init__(self, total_nodes: int = 30, speed_tflops: float = 16.0,
                  queue_noise: float = 0.0, seed: int = 0):
-        super().__init__()
+        super().__init__(seed=seed)
         self.total_nodes = total_nodes
         self.speed_tflops = speed_tflops
         self.queue_noise = queue_noise
-        self.rng = np.random.default_rng(seed)
-        self._work: dict[str, float] = {}     # job_id -> seconds of work
+        self._noise: dict[str, float] = {}    # job_id -> runtime multiplier
 
     def render_artifact(self, spec: JobSpec) -> str:
         gpu_line = (f"#SBATCH --gres=gpu:{spec.gpus_per_node}\n"
@@ -39,22 +41,31 @@ class SlurmAdapter(SchedulerAdapter):
             mem=spec.mem_gb, gpu_line=gpu_line,
             time_min=max(1, spec.time_limit_s // 60), command=spec.command)
 
-    def set_workload(self, job_id: str, seconds: float):
-        self._work[job_id] = seconds
+    def _on_submit(self, h: JobHandle):
+        if self.queue_noise:
+            self._noise[h.job_id] = float(
+                self.rng.lognormal(0, self.queue_noise))
 
-    def _nodes_in_use(self) -> int:
-        return sum(h.spec.nodes for h in self.running())
+    def total_capacity(self) -> int:
+        return self.total_nodes
 
     def _try_start(self, handle: JobHandle) -> bool:
-        return self._nodes_in_use() + handle.spec.nodes <= self.total_nodes
+        return self.nodes_in_use() + handle.spec.nodes <= self.total_nodes
 
-    def _runtime_s(self, spec: JobSpec) -> float:
-        base = self._work.get(self._find_id(spec), 60.0)
-        noise = self.rng.lognormal(0, self.queue_noise) if self.queue_noise else 1.0
-        return min(base * noise, spec.time_limit_s)
+    def _runtime_s(self, handle: JobHandle) -> float:
+        noise = self._noise.get(handle.job_id, 1.0)
+        return min(handle.work_s * noise, handle.spec.time_limit_s)
 
-    def _find_id(self, spec: JobSpec) -> str:
-        for jid, h in self.jobs.items():
-            if h.spec is spec:
-                return jid
-        return ""
+    def prune_terminal(self) -> int:
+        n = super().prune_terminal()
+        self._noise = {jid: v for jid, v in self._noise.items()
+                       if jid in self.jobs}
+        return n
+
+    def state_dict(self) -> dict:
+        return {**super().state_dict(), "noise": self._noise}
+
+    def load_state(self, s: dict, render_artifacts: bool = True):
+        super().load_state(s, render_artifacts)
+        self._noise = {jid: float(v)
+                       for jid, v in s.get("noise", {}).items()}

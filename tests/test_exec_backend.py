@@ -1,0 +1,344 @@
+"""Execution-backend suite: ClosedFormBackend vs SchedulerBackend.
+
+Pins the ISSUE-5 acceptance criteria:
+  * with an uncontended pool and zero queue noise the scheduler backend's
+    round durations match the closed form to <= 1e-6 (backend-level, sync
+    orchestrator, and async orchestrator trajectories),
+  * contended pools produce queue waits + elastic HPC->cloud overflow that
+    land in RoundLog/CommitLog,
+  * spot preemptions originate from the K8s adapter's event stream,
+  * async kill/--resume under the scheduler backend replays bit-identically
+    (pool state checkpointed),
+  * recovery_policy="adaptive" chooses restart/resume/discard per fault and
+    logs the decision in CommitLog.recovery_actions."""
+import math
+from dataclasses import asdict
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointManager
+from repro.core import AsyncConfig, FLConfig
+from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
+from repro.exec import (ClientExecution, ClosedFormBackend, SchedulerBackend,
+                        make_backend)
+from repro.models.cnn import CNN, CNNConfig
+from repro.orchestrator import (AsyncOrchestrator, FaultConfig, Orchestrator,
+                                StragglerPolicy, make_hybrid_fleet)
+from repro.sched import HybridAdapter, K8sAdapter, SlurmAdapter
+
+CFG = CNNConfig("tiny-cnn", (28, 28, 1), 9, channels=(4, 8), dense=32)
+SEED, N_CLIENTS = 11, 6
+
+_STEP_CACHE: dict = {}
+
+
+def _share_steps(orch):
+    key = (orch.async_cfg.buffer_size, orch.fl.local_steps,
+           orch.async_cfg.staleness_exponent)
+    if key in _STEP_CACHE:
+        orch._client_update, orch._commit_step = _STEP_CACHE[key]
+    else:
+        _STEP_CACHE[key] = (orch._client_update, orch._commit_step)
+
+
+def uncontended_pool(n: int = 64, preempt_per_min: float = 0.0,
+                     seed: int = 0) -> HybridAdapter:
+    """A pool that never queues: one node per possible in-flight job."""
+    return HybridAdapter(
+        slurm=SlurmAdapter(total_nodes=n, seed=seed),
+        k8s=K8sAdapter(initial_nodes=n, max_nodes=n,
+                       preempt_prob_per_min=preempt_per_min, seed=seed + 1))
+
+
+def task(seed=SEED, n_clients=N_CLIENTS):
+    data = medmnist_like(n=400, seed=seed)
+    parts = partition_dirichlet(data.y, n_clients, alpha=0.5, seed=seed)
+    fed = FederatedDataset(data, parts, seed=seed)
+    model = CNN(CFG)
+    params = model.init(jax.random.PRNGKey(seed))
+    fleet = make_hybrid_fleet(n_clients // 2, n_clients - n_clients // 2,
+                              seed=seed, data_sizes=[len(p) for p in parts])
+    return fed, model, params, fleet
+
+
+# ---------------------------------------------------------------- unit level
+def test_zero_contention_backend_equivalence():
+    fleet = make_hybrid_fleet(4, 4, seed=0)
+    pol = StragglerPolicy(contention_sigma=0.4)
+    cf = ClosedFormBackend().bind(np.random.default_rng(7), pol)
+    sb = SchedulerBackend(uncontended_pool()).bind(
+        np.random.default_rng(7), pol)
+    a = cf.execute_round(fleet, 2e12, 50_000_000, 0.0)
+    b = sb.execute_round(fleet, 2e12, 50_000_000, 0.0)
+    for x, y in zip(a, b):
+        assert abs(x.duration_s - y.duration_s) <= 1e-6
+        assert y.queue_wait_s == 0.0 and not y.overflowed
+        assert y.site == x.site
+
+
+def test_async_dispatch_equivalence_and_state_roundtrip():
+    fleet = make_hybrid_fleet(2, 2, seed=1)
+    pol = StragglerPolicy(contention_sigma=0.3)
+    cf = ClosedFormBackend().bind(np.random.default_rng(3), pol)
+    sb = SchedulerBackend(uncontended_pool()).bind(
+        np.random.default_rng(3), pol)
+    t = 0.0
+    for c in fleet * 2:
+        x = cf.execute(c, 2e12, 10_000_000, t)
+        y = sb.execute(c, 2e12, 10_000_000, t)
+        assert abs(x.duration_s - y.duration_s) <= 1e-6
+        t += 0.5
+    # pool state round-trips through a fresh backend
+    twin = SchedulerBackend(uncontended_pool()).bind(
+        np.random.default_rng(99), pol)
+    twin.set_state(sb.state())
+    assert twin.state() == sb.state()
+
+
+def test_scheduler_backend_rejects_mismatched_pool_state():
+    pol = StragglerPolicy()
+    sb = SchedulerBackend(uncontended_pool(n=8)).bind(
+        np.random.default_rng(0), pol)
+    other = SchedulerBackend(uncontended_pool(n=16)).bind(
+        np.random.default_rng(0), pol)
+    with pytest.raises(ValueError, match="pool config"):
+        other.set_state(sb.state())
+    with pytest.raises(ValueError, match="closed-form"):
+        sb.set_state({})
+
+
+def test_contended_pool_queues_fifo():
+    fleet = [c for c in make_hybrid_fleet(4, 0, seed=2)]
+    pol = StragglerPolicy(contention_sigma=0.0)
+    sb = SchedulerBackend(HybridAdapter(
+        slurm=SlurmAdapter(total_nodes=1, seed=0),
+        k8s=K8sAdapter(initial_nodes=4, max_nodes=4, seed=1),
+        overflow_to_cloud=False)).bind(np.random.default_rng(5), pol)
+    execs = sb.execute_round(fleet, 2e12, 10_000_000, 0.0)
+    # one node, FIFO: client i waits for clients < i, exactly
+    expect_wait = 0.0
+    for e in execs:
+        assert abs(e.queue_wait_s - expect_wait) <= 1e-6
+        expect_wait += e.run_s
+    assert execs[-1].queue_wait_s > 0
+
+
+def test_elastic_overflow_lands_on_k8s():
+    fleet = [c for c in make_hybrid_fleet(4, 0, seed=2)]
+    pol = StragglerPolicy(contention_sigma=0.0)
+    sb = SchedulerBackend(HybridAdapter(
+        slurm=SlurmAdapter(total_nodes=2, seed=0),
+        k8s=K8sAdapter(initial_nodes=4, max_nodes=4, seed=1))).bind(
+            np.random.default_rng(5), pol)
+    execs = sb.execute_round(fleet, 2e12, 10_000_000, 0.0)
+    assert [e.site for e in execs] == ["hpc", "hpc", "cloud", "cloud"]
+    assert sum(e.overflowed for e in execs) == 2
+    assert all(e.queue_wait_s == 0.0 for e in execs)   # burst absorbed
+
+
+# ----------------------------------------------------------- orchestrators
+def sync_orch(backend, seed=SEED, straggler=None, faults=None):
+    fed, model, params, fleet = task(seed)
+    orch = Orchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn,
+        fl=FLConfig(num_clients=4, local_steps=1, client_lr=0.05),
+        straggler=straggler or StragglerPolicy(contention_sigma=0.5),
+        faults=faults or FaultConfig(),
+        batch_size=8, flops_per_client_round=2e12, backend=backend,
+        seed=seed)
+    return orch, params
+
+
+def test_sync_round_durations_match_across_backends():
+    a, params = sync_orch(None)
+    b, params2 = sync_orch(SchedulerBackend(uncontended_pool()))
+    b._round_step = a._round_step          # share the jit cache
+    a.run(params, 3)
+    b.run(params2, 3)
+    for la, lb in zip(a.logs, b.logs):
+        assert abs(la.duration_s - lb.duration_s) <= 1e-6
+        assert asdict(la) == asdict(lb)
+
+
+def test_sync_contended_round_logs_queue_wait_and_overflow():
+    pool = HybridAdapter(slurm=SlurmAdapter(total_nodes=1, seed=0),
+                         k8s=K8sAdapter(initial_nodes=1, max_nodes=2,
+                                        seed=1))
+    orch, params = sync_orch(SchedulerBackend(pool))
+    orch.run(params, 2)
+    assert any(l.mean_queue_wait_s > 0 for l in orch.logs)
+    assert any(l.n_overflow > 0 for l in orch.logs)
+
+
+def async_orch(backend, seed=SEED, faults=None, mgr=None,
+               checkpoint_every=0, buffer_size=3, max_staleness=20,
+               recovery_policy=None):
+    fed, model, params, fleet = task(seed)
+    fa = faults or FaultConfig()
+    if recovery_policy:
+        fa = FaultConfig(**{**asdict(fa),
+                            "recovery_policy": recovery_policy})
+    orch = AsyncOrchestrator(
+        fleet=fleet, fed_data=fed, loss_fn=model.loss_fn,
+        fl=FLConfig(mode="async", num_clients=N_CLIENTS, local_steps=1,
+                    client_lr=0.05),
+        async_cfg=AsyncConfig(buffer_size=buffer_size, max_concurrency=4,
+                              max_staleness=max_staleness),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        faults=fa, batch_size=8, flops_per_client_round=2e12,
+        checkpoint_mgr=mgr, checkpoint_every=checkpoint_every,
+        backend=backend, seed=seed)
+    _share_steps(orch)
+    return orch, params
+
+
+def _trajectory(orch):
+    def norm(d):
+        return {k: ("nan" if isinstance(v, float) and math.isnan(v) else v)
+                for k, v in d.items()}
+    return ([norm(asdict(l)) for l in orch.logs],
+            list(orch.events_processed),
+            [asdict(r) for r in orch.comm.records])
+
+
+def test_async_trajectory_equivalence_uncontended():
+    a, params = async_orch(None)
+    b, params2 = async_orch(SchedulerBackend(uncontended_pool()))
+    a.run(params, 4)
+    b.run(params2, 4)
+    assert _trajectory(a) == _trajectory(b)
+
+
+def test_async_preemptions_originate_from_k8s_adapter():
+    # NO injector spot_preempt_prob — every preempt must come from the pool
+    pool = uncontended_pool(preempt_per_min=30.0)
+    orch, params = async_orch(
+        SchedulerBackend(pool),
+        faults=FaultConfig(recovery_policy="discard"))
+    orch.run(params, 6)
+    preempts = [e for e in orch.events_processed if e[4] == "preempt"]
+    assert preempts, "adapter preemptions never reached the event stream"
+    assert orch.lost_to_faults > 0
+    spot_cids = {c.cid for c in orch.fleet if c.profile.spot}
+    assert {e[2] for e in preempts} <= spot_cids
+
+
+@pytest.mark.parametrize("n_kill", [1, 2])
+def test_scheduler_backend_kill_resume_bit_identical(tmp_path, n_kill):
+    n_commits = 5
+    faults = FaultConfig(recovery_policy="resume")
+    mk = lambda **kw: async_orch(
+        SchedulerBackend(uncontended_pool(n=3, preempt_per_min=20.0)),
+        faults=faults, **kw)
+
+    straight, params = mk()
+    p_straight, _ = straight.run(params, n_commits)
+    assert any(e[4] == "preempt" for e in straight.events_processed)
+
+    mgr = AsyncCheckpointManager(tmp_path, keep=20)
+    killed, params2 = mk(mgr=mgr, checkpoint_every=1)
+    killed.run(params2, n_kill)
+    assert killed.version == n_kill
+
+    resumed, params3 = mk()
+    resumed.checkpoint_mgr = None
+    p0, st0 = mgr.restore_async(resumed, params3)
+    assert resumed.version == n_kill
+    p_resumed, _ = resumed.run(p0, n_commits, server_state=st0)
+
+    assert _trajectory(resumed) == _trajectory(straight)
+    for x, y in zip(jax.tree.leaves(p_resumed), jax.tree.leaves(p_straight)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=0, atol=1e-6)
+
+
+def test_restore_rejects_backend_mismatch(tmp_path):
+    mgr = AsyncCheckpointManager(tmp_path)
+    orch, params = async_orch(SchedulerBackend(uncontended_pool()), mgr=mgr)
+    orch.run(params, 2)
+    other, params2 = async_orch(None)
+    with pytest.raises(ValueError, match="config"):
+        mgr.restore_async(other, params2)
+
+
+def test_release_tolerates_pruned_terminal_job():
+    """Regression: a job can go terminal on its own (pool preemption before
+    an injector fault's strike time) and be pruned by a later dispatch;
+    release() must not KeyError on it."""
+    fleet = make_hybrid_fleet(0, 2, seed=3)
+    pol = StragglerPolicy(contention_sigma=0.0)
+    sb = SchedulerBackend(uncontended_pool()).bind(
+        np.random.default_rng(1), pol)
+    ex = sb.execute(fleet[0], 2e12, 10_000_000, 0.0)
+    sb.hybrid.advance_to(ex.duration_s + 1.0)       # job completes
+    sb.hybrid.prune_terminal()
+    sb.release(ex.job_id, ex.duration_s + 2.0)      # must not raise
+    sb.release("", 0.0)
+
+
+def test_async_mixed_injector_and_pool_faults_run_to_completion():
+    """Stress: adapter preemptions + injector dropouts/partitions + adaptive
+    recovery on a CONTENDED pool all interleave without crashing, and both
+    fault sources appear in the event stream."""
+    pool = HybridAdapter(
+        slurm=SlurmAdapter(total_nodes=2, seed=0),
+        k8s=K8sAdapter(initial_nodes=2, max_nodes=3,
+                       preempt_prob_per_min=20.0, seed=1))
+    faults = FaultConfig(dropout_prob=0.15, partition_prob=0.3,
+                         partition_len=2, recovery_policy="adaptive")
+    orch, params = async_orch(SchedulerBackend(pool), faults=faults)
+    orch.run(params, 8)
+    assert orch.version == 8
+    kinds = {e[4] for e in orch.events_processed if e[4]}
+    assert "preempt" in kinds               # pool-origin
+    assert kinds & {"dropout", "partition"}  # injector-origin
+
+
+# ------------------------------------------------------- adaptive recovery
+def test_adaptive_recovery_logs_actions():
+    faults = FaultConfig(spot_preempt_prob=0.6, recovery_policy="adaptive")
+    orch, params = async_orch(None, faults=faults)
+    orch.run(params, 8)
+    actions = [a for l in orch.logs for a in l.recovery_actions]
+    assert actions, "no adaptive decisions were logged"
+    assert all(a.split(":")[0] in ("preempt", "partition") for a in actions)
+    assert all(a.split(":")[1] in ("restart", "resume", "discard")
+               for a in actions)
+
+
+def test_adaptive_recovery_discards_hopelessly_stale():
+    # tight staleness cap + commit-per-arrival: once commits are flowing,
+    # the projected staleness of a resumed attempt exceeds the cap and the
+    # adaptive policy must start choosing discard over a doomed recovery
+    faults = FaultConfig(spot_preempt_prob=0.6, recovery_policy="adaptive")
+    orch, params = async_orch(None, faults=faults, max_staleness=1,
+                              buffer_size=1)
+    orch.run(params, 10)
+    actions = [a for l in orch.logs for a in l.recovery_actions]
+    assert actions
+    assert any(a.endswith(":discard") for a in actions)
+
+
+def test_adaptive_recovery_resumes_mostly_done_work():
+    from dataclasses import replace
+
+    from repro.orchestrator.async_server import PendingUpdate
+    orch, params = async_orch(None)
+    orch.clock, orch.version = 100.0, 2
+    orch.fl = replace(orch.fl, local_steps=4)
+    nearly_done = PendingUpdate(seq=0, cid=0, client_idx=0,
+                                dispatch_version=2, dispatch_time=90.0,
+                                duration_s=10.0, work_s=10.0, fault="preempt",
+                                steps_done=3)
+    assert orch._choose_recovery(nearly_done, 99.0) == "resume"
+    fresh = PendingUpdate(seq=1, cid=1, client_idx=1, dispatch_version=2,
+                          dispatch_time=98.0, duration_s=10.0, work_s=10.0,
+                          fault="preempt", steps_done=0)
+    assert orch._choose_recovery(fresh, 99.0) == "restart"
+    orch.async_cfg = replace(orch.async_cfg, max_staleness=0)
+    stale = PendingUpdate(seq=2, cid=2, client_idx=2, dispatch_version=2,
+                          dispatch_time=0.0, duration_s=10.0, work_s=10.0,
+                          fault="preempt", steps_done=0)
+    assert orch._choose_recovery(stale, 99.0) == "discard"

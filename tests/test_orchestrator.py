@@ -49,6 +49,20 @@ def test_adaptive_load_balancing_excludes_slow_history():
     assert freq3 == 0
 
 
+def test_fastest_k_ties_admit_exactly_k():
+    # regression: `times <= kth` admitted every client tied at the k-th
+    # time, over-filling the round past k
+    times = np.array([2.0, 1.0, 2.0, 2.0, 5.0])
+    mask, dur = apply_mitigation(times, StragglerPolicy(fastest_k=2))
+    assert mask.sum() == 2
+    assert dur == 2.0
+    # stable tie-break: the first client at the tied time wins the slot
+    assert mask.tolist() == [1, 1, 0, 0, 0]
+    mask, dur = apply_mitigation(np.array([3.0, 3.0, 3.0]),
+                                 StragglerPolicy(fastest_k=1))
+    assert mask.tolist() == [1, 0, 0] and dur == 3.0
+
+
 def test_straggler_deadline_and_fastest_k():
     times = np.array([1.0, 2.0, 3.0, 10.0])
     mask, dur = apply_mitigation(times, StragglerPolicy(deadline_s=5.0))

@@ -76,3 +76,105 @@ def test_hybrid_routing_and_overflow():
     hy.advance(0.1)
     h_burst = hy.submit(mkspec("c", site="hpc"))
     assert h_burst.job_id.startswith("pod-")
+
+
+def test_hybrid_elastic_overflow_drains_and_routes_back():
+    """Saturate the SLURM pool -> HPC jobs burst to K8s; once the pool
+    drains, new HPC jobs route back to SLURM."""
+    hy = HybridAdapter(slurm=SlurmAdapter(total_nodes=2),
+                       k8s=K8sAdapter(initial_nodes=8, max_nodes=8))
+    filling = [hy.submit(mkspec(f"f{i}", site="hpc"), work_s=50.0)
+               for i in range(2)]
+    hy.advance(0.0)
+    assert all(h.job_id.startswith("slurm-") for h in filling)
+    assert all(hy.poll(h.job_id) == JobState.RUNNING for h in filling)
+    # pool full (queued work counts too): the burst lands on K8s
+    burst = [hy.submit(mkspec(f"b{i}", site="hpc"), work_s=10.0)
+             for i in range(3)]
+    assert all(h.job_id.startswith("pod-") for h in burst)
+    assert all(hy.site_of(h.job_id) == "cloud" for h in burst)
+    hy.advance(0.0)                   # settle: burst pods start immediately
+    # drain everything, then route back home
+    hy.advance(60.0)
+    assert all(hy.poll(h.job_id) == JobState.COMPLETED
+               for h in filling + burst)
+    back = hy.submit(mkspec("back", site="hpc"), work_s=1.0)
+    assert back.job_id.startswith("slurm-")
+    assert hy.site_of(back.job_id) == "hpc"
+
+
+def test_slurm_workload_attached_to_handle():
+    """Regression for the `_find_id` identity lookup: a COPIED/reused spec
+    must not silently fall back to the 60 s default workload."""
+    import dataclasses
+
+    s = SlurmAdapter(total_nodes=4)
+    spec = mkspec("orig")
+    h1 = s.submit(spec, work_s=5.0)
+    h2 = s.submit(dataclasses.replace(spec, name="copy"), work_s=7.0)
+    h3 = s.submit(spec)                      # reused spec object, no work
+    s.set_workload(h3.job_id, 9.0)
+    assert (h1.work_s, h2.work_s, h3.work_s) == (5.0, 7.0, 9.0)
+    s.advance(0.0)                           # settle: all three start at t=0
+    s.advance(6.0)
+    assert s.poll(h1.job_id) == JobState.COMPLETED
+    assert s.poll(h2.job_id) == JobState.RUNNING
+    s.advance(4.0)
+    assert s.poll(h2.job_id) == JobState.COMPLETED
+    assert s.poll(h3.job_id) == JobState.COMPLETED
+    assert h1.end_time == 5.0 and h2.end_time == 7.0 and h3.end_time == 9.0
+
+
+def test_public_capacity_api():
+    s = SlurmAdapter(total_nodes=3)
+    assert s.total_capacity() == 3 and s.nodes_in_use() == 0
+    h = s.submit(mkspec("a", nodes=2), work_s=100.0)
+    q = s.submit(mkspec("b", nodes=2), work_s=100.0)
+    s.advance(0.0)
+    assert s.nodes_in_use() == 2               # only "a" fits
+    assert s.committed_nodes() == 4            # queued work counts
+    k = K8sAdapter(initial_nodes=2, max_nodes=4)
+    assert k.total_capacity() == 4
+    k.submit(mkspec("p", site="cloud"), work_s=100.0)
+    k.advance(0.0)
+    assert k.nodes_in_use() == 1
+
+
+def test_coarse_advance_starts_queued_jobs_at_exact_times():
+    """Regression: advance_to must step through intermediate transitions —
+    a queued job starts the instant capacity frees, not at the (coarse)
+    destination time.  This is what keeps the real pool identical to the
+    SchedulerBackend's lookahead clone under contention."""
+    s = SlurmAdapter(total_nodes=1)
+    a = s.submit(mkspec("a"), work_s=10.0)
+    b = s.submit(mkspec("b"), work_s=5.0)
+    s.advance(0.0)
+    s.advance(25.0)                       # one coarse jump past both jobs
+    assert a.end_time == 10.0
+    assert b.start_time == 10.0           # NOT 25.0
+    assert b.end_time == 15.0
+
+
+def test_adapter_state_roundtrip():
+    """state_dict/load_state reproduces mid-flight pools exactly — the
+    property the SchedulerBackend's checkpointing builds on."""
+    hy = HybridAdapter(slurm=SlurmAdapter(total_nodes=1, queue_noise=0.3),
+                       k8s=K8sAdapter(initial_nodes=1, max_nodes=4,
+                                      preempt_prob_per_min=5.0))
+    for i in range(3):
+        hy.submit(mkspec(f"h{i}", site="hpc"), work_s=20.0 + i)
+        hy.submit(mkspec(f"c{i}", site="cloud", preemptible=True),
+                  work_s=15.0 + i)
+    hy.advance(5.0)
+    twin = HybridAdapter(slurm=SlurmAdapter(total_nodes=1, queue_noise=0.3),
+                         k8s=K8sAdapter(initial_nodes=1, max_nodes=4,
+                                        preempt_prob_per_min=5.0))
+    twin.load_state(hy.state_dict())
+    # both futures play out identically
+    hy.advance(100.0)
+    twin.advance(100.0)
+    a = {jid: (h.state.value, h.start_time, h.end_time)
+         for jid, h in {**hy.slurm.jobs, **hy.k8s.jobs}.items()}
+    b = {jid: (h.state.value, h.start_time, h.end_time)
+         for jid, h in {**twin.slurm.jobs, **twin.k8s.jobs}.items()}
+    assert a == b
