@@ -17,13 +17,19 @@ Reported per mode:
 """
 from __future__ import annotations
 
+import argparse
 import time
 
+import jax
 import numpy as np
 
 from repro.core import AsyncConfig, FLConfig
-from repro.orchestrator import (AsyncOrchestrator, Orchestrator,
-                                StragglerPolicy, make_hybrid_fleet)
+from repro.data import (VirtualFederatedDataset, medmnist_like,
+                        partition_dirichlet)
+from repro.models.cnn import CNN, CNNConfig
+from repro.orchestrator import (AsyncOrchestrator, BatchedAsyncOrchestrator,
+                                Orchestrator, StragglerPolicy,
+                                make_hybrid_fleet, make_mega_fleet)
 from benchmarks.common import dataset_bundle, save
 
 SIGMA = 0.6                 # lognormal contention noise (>= 0.5 per protocol)
@@ -115,5 +121,84 @@ def main(rounds: int = None):
     return rows
 
 
+# ---------------------------------------------------------------- mega sweep
+# Fleet-size sweep 1e2 -> 1e5: the per-event engine vs the batched engine on
+# the SAME CohortFleet + virtual dataset + MLP workload.  Headline is
+# wall-clock per simulated second — the engine-overhead metric that decides
+# whether a 100k-client population is simulable at all.  Legacy stops at 1k
+# (its O(population) selection scan makes 10k+ runs pointless to wait for).
+
+SWEEP_SIZES = [100, 1_000, 10_000, 100_000]
+LEGACY_MAX = 1_000
+SWEEP_COMMITS = 30
+SWEEP_BUFFER_K = 16
+SWEEP_CFG = CNNConfig("sweep-mlp", (28, 28, 1), 9, channels=(), dense=64)
+
+
+def run_fleet(n_clients: int, engine: str, seed: int = 0):
+    data = medmnist_like(n=600, seed=seed)
+    parts = partition_dirichlet(data.y, 8, alpha=0.5, seed=seed)
+    model = CNN(SWEEP_CFG)
+    params = model.init(jax.random.PRNGKey(seed))
+    cls = {"legacy": AsyncOrchestrator,
+           "batched": BatchedAsyncOrchestrator}[engine]
+    orch = cls(
+        fleet=make_mega_fleet(n_clients, seed=3),
+        fed_data=VirtualFederatedDataset(data, parts, seed=seed,
+                                         n_virtual=n_clients),
+        loss_fn=model.loss_fn,
+        fl=FLConfig(mode="async", num_clients=n_clients, local_steps=2,
+                    client_lr=0.05),
+        async_cfg=AsyncConfig(buffer_size=SWEEP_BUFFER_K,
+                              max_concurrency=min(n_clients, 128),
+                              max_staleness=100),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        batch_size=8, flops_per_client_round=1e12, seed=7)
+    t0 = time.perf_counter()
+    orch.run(params, SWEEP_COMMITS)
+    wall = time.perf_counter() - t0
+    updates = orch.updates_applied
+    return {
+        "n_clients": n_clients, "engine": engine,
+        "commits": orch.version, "updates_applied": updates,
+        "sim_time_s": orch.clock, "wall_s": wall,
+        "wall_per_sim_s": wall / orch.clock,
+        "ms_per_update": 1e3 * wall / max(updates, 1),
+    }
+
+
+def sweep():
+    rows = []
+    for n in SWEEP_SIZES:
+        engines = ["legacy", "batched"] if n <= LEGACY_MAX else ["batched"]
+        for engine in engines:
+            r = run_fleet(n, engine)
+            rows.append(r)
+            print(f"table_megafleet,n={r['n_clients']},engine={r['engine']},"
+                  f"commits={r['commits']},updates={r['updates_applied']},"
+                  f"sim_s={r['sim_time_s']:.1f},wall_s={r['wall_s']:.2f},"
+                  f"wall_per_sim_s={r['wall_per_sim_s']:.4f},"
+                  f"ms_per_update={r['ms_per_update']:.2f}")
+    by = {(r["n_clients"], r["engine"]): r for r in rows}
+    speedup_1k = (by[(1_000, "legacy")]["wall_per_sim_s"]
+                  / by[(1_000, "batched")]["wall_per_sim_s"])
+    print(f"table_megafleet,wall_per_sim_s_speedup_1k={speedup_1k:.1f}x "
+          f"(acceptance: >= 10x, plus 100k-client run completes)")
+    save("table_megafleet", {
+        "rows": rows, "buffer_k": SWEEP_BUFFER_K, "commits": SWEEP_COMMITS,
+        "wall_per_sim_s_speedup_1k": speedup_1k,
+        "largest_completed_fleet": max(r["n_clients"] for r in rows),
+    })
+    return rows
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the 1e2->1e5 fleet-size engine sweep instead "
+                         "of the sync-vs-async table")
+    args = ap.parse_args()
+    if args.sweep:
+        sweep()
+    else:
+        main()

@@ -61,6 +61,10 @@ def _upd_meta(upd) -> dict:
 
 def async_state_dict(orch) -> tuple[dict, dict]:
     """(json-serialisable host state, {seq: delta pytree} for pending work)."""
+    # deferred-training engines hold pending updates as un-run jobs bound to
+    # live params refs; force them into concrete deltas so the snapshot is
+    # self-contained and readable by ANY engine (cross-engine restore)
+    orch._materialize()
     deltas = {}
     events = []
     for t, seq, upd in orch._events:
@@ -79,6 +83,7 @@ def async_state_dict(orch) -> tuple[dict, dict]:
                    "secure_agg": orch.fl.secure_agg,
                    "staleness_exponent":
                        str(orch.async_cfg.staleness_exponent),
+                   "commit_chunk": orch.async_cfg.commit_chunk,
                    "exec_backend": orch.backend.name},
         # scheduler state: node pools, queued/in-flight jobs, adapter RNG —
         # empty for the closed-form backend (its randomness is orch.rng)
@@ -101,20 +106,32 @@ def async_state_dict(orch) -> tuple[dict, dict]:
         "jrng": np.asarray(orch.jrng, np.uint32).tolist(),
         "selection_rng": orch.selection.rng.bit_generator.state,
         "fault": orch.fault_injector.state(),
-        "data_rngs": [g.bit_generator.state for g in orch.fed_data._rngs],
         "inflight": sorted(orch._inflight),
         "buffer_bytes": orch._buffer_bytes,
         "events": events,
         "buffer": buffer,
         "logs": [asdict(l) for l in orch.logs],
         "comm": [asdict(r) for r in orch.comm.records],
+        # lazy fleets (CohortFleet) serialise only the clients that ever
+        # dispatched — the rest are reconstructable from the cohort specs
         "fleet": [{"cid": c.cid, "completions": c.completions,
                    "failures": c.failures,
                    "ema_round_time": c.ema_round_time,
                    "last_selected_round": c.last_selected_round}
-                  for c in orch.fleet],
+                  for c in (orch.fleet.live.values()
+                            if hasattr(orch.fleet, "live") else orch.fleet)],
         "events_processed": [list(e) for e in orch.events_processed],
     }
+    # per-client data-sampler generators: lazy datasets serialise only the
+    # touched ones (O(participants), not O(population))
+    if hasattr(orch.fed_data, "rng_states"):
+        state["data_rngs_lazy"] = orch.fed_data.rng_states()
+    else:
+        state["data_rngs"] = [g.bit_generator.state
+                              for g in orch.fed_data._rngs]
+    eng = orch.engine_state()
+    if eng:
+        state["engine"] = eng
     return state, deltas
 
 
@@ -131,6 +148,7 @@ def load_async_state(orch, state: dict, deltas: dict):
             or cfg["n_fleet"] != len(orch.fleet) \
             or cfg.get("secure_agg", False) != orch.fl.secure_agg \
             or cfg.get("exec_backend", "closed-form") != orch.backend.name \
+            or cfg.get("commit_chunk", 0) != orch.async_cfg.commit_chunk \
             or cfg.get("staleness_exponent",
                        str(orch.async_cfg.staleness_exponent)) \
             != str(orch.async_cfg.staleness_exponent):
@@ -155,8 +173,15 @@ def load_async_state(orch, state: dict, deltas: dict):
     orch.jrng = jnp.asarray(state["jrng"], jnp.uint32)
     orch.selection.rng.bit_generator.state = state["selection_rng"]
     orch.fault_injector.set_state(state["fault"])
-    for g, s in zip(orch.fed_data._rngs, state["data_rngs"]):
-        g.bit_generator.state = s
+    if "data_rngs_lazy" in state:
+        if not hasattr(orch.fed_data, "load_rng_states"):
+            raise ValueError(
+                "checkpoint carries lazy per-client rng state but the "
+                "restore dataset is not a VirtualFederatedDataset")
+        orch.fed_data.load_rng_states(state["data_rngs_lazy"])
+    else:
+        for g, s in zip(orch.fed_data._rngs, state["data_rngs"]):
+            g.bit_generator.state = s
 
     def mk_upd(meta):
         # missing keys (pre-backend-era checkpoints) fall to field defaults
@@ -173,13 +198,24 @@ def load_async_state(orch, state: dict, deltas: dict):
     orch.logs = [CommitLog(**l) for l in state["logs"]]
     orch.comm.records = [TransferRecord(**r) for r in state["comm"]]
     orch.events_processed = [tuple(e) for e in state["events_processed"]]
-    hist = {h["cid"]: h for h in state["fleet"]}
-    for c in orch.fleet:
-        h = hist[c.cid]
+    # index by cid rather than iterating the fleet: lazy-fleet snapshots
+    # carry histories only for clients that dispatched (client cid == fleet
+    # index in every fleet builder), and a fresh fleet's untouched clients
+    # already hold the default history
+    for h in state["fleet"]:
+        c = orch.fleet[int(h["cid"])]
         c.completions = int(h["completions"])
         c.failures = int(h["failures"])
         c.ema_round_time = float(h["ema_round_time"])
         c.last_selected_round = int(h["last_selected_round"])
+    if state.get("engine"):
+        if not hasattr(orch, "load_engine_state"):
+            raise ValueError(
+                "checkpoint carries engine-private state (cohort draw "
+                "blocks) but the restore orchestrator is not a "
+                "BatchedAsyncOrchestrator")
+        orch.load_engine_state(state["engine"])
+    orch._after_restore()
 
 
 class AsyncCheckpointManager(CheckpointManager):

@@ -3,6 +3,7 @@ robust aggregation, and communication-efficient compression."""
 from repro.core.round import FLConfig, build_fl_round_step, build_local_train  # noqa: F401
 from repro.core.async_round import (AdaptiveStalenessController, AsyncConfig,  # noqa: F401
                                     build_buffer_commit_step,
+                                    build_chunked_commit_steps,
                                     build_client_update_step,
                                     staleness_weights)
 from repro.core.pipeline import UpdatePipeline, build_update_pipeline  # noqa: F401

@@ -84,6 +84,14 @@ class AsyncConfig:
     #                                 oldest update has waited T sim-seconds
     #                                 without a K-commit (0 = off)
     max_concurrency: int = 16       # clients training at once
+    commit_chunk: int = 0           # C: accumulate the buffer in C-sized
+    #                                 chunks (one device call per chunk, one
+    #                                 normalise+apply at the end) instead of
+    #                                 stacking all K at once.  0 = off (the
+    #                                 single-shot commit).  Chunked ==
+    #                                 single-shot in exact arithmetic; float
+    #                                 summation order differs, so the
+    #                                 agreement is ~1e-5, not bitwise.
 
     def __post_init__(self):
         if self.buffer_size < 1:
@@ -91,6 +99,10 @@ class AsyncConfig:
         if self.max_concurrency < 1:
             raise ValueError(
                 f"max_concurrency must be >= 1, got {self.max_concurrency}")
+        if self.commit_chunk < 0:
+            raise ValueError(
+                f"commit_chunk must be >= 0 (0 = single-shot commit), got "
+                f"{self.commit_chunk}")
         if isinstance(self.staleness_exponent, str):
             if self.staleness_exponent != "adaptive":
                 raise ValueError(
@@ -230,3 +242,44 @@ def build_buffer_commit_step(server_opt: ServerOptimizer, cfg: FLConfig,
         return new_params, new_state, metrics
 
     return commit
+
+
+def build_chunked_commit_steps(server_opt: ServerOptimizer, cfg: FLConfig,
+                               async_cfg: AsyncConfig):
+    """jit-able (accumulate, finalize) pair: the buffer commit split into
+    C-sized chunks with ONE device call per chunk.
+
+    ``accumulate(acc, wsum, deltas[C, ...], weights, staleness, losses,
+    mask, ids, exponent, rng) -> (acc', wsum')`` folds one chunk's
+    unnormalised weighted(-masked) sum into a float32 accumulator;
+    ``finalize(params, server_state, acc, wsum)`` normalises by the total
+    raw mass and applies the server optimizer — by the additivity of every
+    pre-normalise pipeline stage this equals the single-shot
+    ``build_buffer_commit_step`` over the concatenated slots in exact
+    arithmetic (float summation order differs: ~1e-5 agreement, pinned by a
+    property test).  Each chunk gets its own rng (the caller fold_ins the
+    chunk index) and its own arange ids, so pairwise secure-agg masks
+    cancel chunk-locally.  Padding slots carry mask 0 as in the single-shot
+    step."""
+    if cfg.aggregation == "trimmed_mean":
+        raise ValueError(
+            "aggregation='trimmed_mean' is not supported by the async "
+            "buffered commit (robust trimming over a padded, "
+            "staleness-weighted buffer is undefined); use fedavg/weighted "
+            "or the sync round loop")
+    pipe = build_update_pipeline(cfg)
+
+    def accumulate(acc, wsum, deltas, weights, staleness, losses, mask, ids,
+                   exponent, rng):
+        summed, _, w_raw = pipe.combine_unnormalised(
+            deltas, weights, mask, losses, rng, ids=ids,
+            staleness=staleness, exponent=exponent)
+        acc = jax.tree.map(lambda a, s: a + s.astype(a.dtype), acc, summed)
+        return acc, wsum + w_raw.sum()
+
+    def finalize(params, server_state, acc, wsum):
+        delta = pipe.normalise(acc, wsum)
+        new_params, new_state = server_opt.apply(params, delta, server_state)
+        return new_params, new_state, {"delta_norm": global_norm(delta)}
+
+    return accumulate, finalize

@@ -181,24 +181,24 @@ class UpdatePipeline:
         return jax.tree.map(lambda a, c: a + c.astype(a.dtype), acc, contrib)
 
     # --------------------------------------------------------- combinators
-    def combine(self, deltas, weights, mask, losses, rng, ids=None,
-                staleness=None, exponent=None):
-        """The full batched stack over [K, ...] slot deltas.
+    def combine_unnormalised(self, deltas, weights, mask, losses, rng,
+                             ids=None, staleness=None, exponent=None):
+        """compress -> weight/discount -> (secure_mask) -> weighted sum,
+        WITHOUT the closing normalise.  Returns (summed, w_eff, w_raw).
 
-        Returns (delta, w_eff, w_raw).  Serves the parallel sync mode
-        (staleness=None) and the async buffered commit (staleness +
-        exponent set); handles the trimmed-mean and hierarchical pod
-        variants so no execution mode re-implements them."""
+        Every stage up to normalise is slot-local or additive, so a commit
+        over K slots equals the sum of this over any partition of the slots
+        into chunks, normalised once by the total raw mass — the algebra the
+        chunked async commit (AsyncConfig.commit_chunk) accumulates on.
+        Each chunk must carry its own rng (fold_in per chunk): masks then
+        cancel within each chunk independently, and per-slot compression
+        randomness stays unique."""
+        if self.cfg.aggregation == "trimmed_mean":
+            raise ValueError(
+                "trimmed_mean is not a chunk-accumulable aggregate: "
+                "coordinate-wise trimming needs all slots at once")
         w_eff, w_raw = self.client_weights(weights, mask, losses,
                                            staleness, exponent)
-        if self.cfg.aggregation == "trimmed_mean":
-            # robust trimming consumes RAW per-slot deltas (no compression,
-            # no masking — rejected at build time): same as the historic
-            # inline path
-            return agg.trimmed_mean(deltas, mask), w_eff, w_raw
-        if self.cfg.hierarchical and self.n_pods > 1:
-            delta = self._combine_hierarchical(deltas, w_eff, w_raw, rng)
-            return delta, w_eff, w_raw
         stacked = self.compress_each(deltas, rng)
         if self.cfg.secure_agg:
             if ids is None:
@@ -211,6 +211,31 @@ class UpdatePipeline:
                                   masked)
         else:
             summed = self.weighted_sum(stacked, w_eff)
+        return summed, w_eff, w_raw
+
+    def combine(self, deltas, weights, mask, losses, rng, ids=None,
+                staleness=None, exponent=None):
+        """The full batched stack over [K, ...] slot deltas.
+
+        Returns (delta, w_eff, w_raw).  Serves the parallel sync mode
+        (staleness=None) and the async buffered commit (staleness +
+        exponent set); handles the trimmed-mean and hierarchical pod
+        variants so no execution mode re-implements them."""
+        if self.cfg.aggregation == "trimmed_mean":
+            # robust trimming consumes RAW per-slot deltas (no compression,
+            # no masking — rejected at build time): same as the historic
+            # inline path
+            w_eff, w_raw = self.client_weights(weights, mask, losses,
+                                               staleness, exponent)
+            return agg.trimmed_mean(deltas, mask), w_eff, w_raw
+        if self.cfg.hierarchical and self.n_pods > 1:
+            w_eff, w_raw = self.client_weights(weights, mask, losses,
+                                               staleness, exponent)
+            delta = self._combine_hierarchical(deltas, w_eff, w_raw, rng)
+            return delta, w_eff, w_raw
+        summed, w_eff, w_raw = self.combine_unnormalised(
+            deltas, weights, mask, losses, rng, ids=ids,
+            staleness=staleness, exponent=exponent)
         return self.normalise(summed, w_raw.sum()), w_eff, w_raw
 
     def _combine_hierarchical(self, deltas, w_eff, w_raw, rng):

@@ -5,4 +5,4 @@ from repro.data.partition import (  # noqa: F401
     partition_by_class, partition_by_group, partition_dirichlet,
     partition_quantity_skew,
 )
-from repro.data.federated import FederatedDataset  # noqa: F401
+from repro.data.federated import FederatedDataset, VirtualFederatedDataset  # noqa: F401

@@ -29,8 +29,16 @@ class FederatedDataset:
     def num_clients(self) -> int:
         return len(self.client_indices)
 
+    def _indices(self, c: int) -> np.ndarray:
+        """The data shard client ``c`` owns (overridden by the virtual
+        mega-fleet dataset, which maps many clients onto few shards)."""
+        return self.client_indices[c]
+
+    def _rng_for(self, c: int) -> np.random.Generator:
+        return self._rngs[c]
+
     def client_size(self, c: int) -> int:
-        return len(self.client_indices[c])
+        return len(self._indices(c))
 
     @property
     def sizes(self) -> np.ndarray:
@@ -42,9 +50,10 @@ class FederatedDataset:
         """Stacked batches for the round: leaves [C, H, b, ...]."""
         xs, ys = [], []
         for c in client_ids:
-            idx = self.client_indices[c]
-            take = self._rngs[c].choice(idx, (local_steps, batch_size),
-                                        replace=len(idx) < local_steps * batch_size)
+            idx = self._indices(c)
+            take = self._rng_for(c).choice(
+                idx, (local_steps, batch_size),
+                replace=len(idx) < local_steps * batch_size)
             xs.append(self.data.x[take])
             ys.append(self.data.y[take] if self.data.y is not None else None)
         x = np.stack(xs)
@@ -65,3 +74,51 @@ class FederatedDataset:
                     "targets": x[..., 1:].astype(np.int32)}
         return {"image": x.astype(np.float32),
                 "label": self.data.y[idx].astype(np.int32)}
+
+
+@dataclass
+class VirtualFederatedDataset(FederatedDataset):
+    """A mega-fleet view over a small set of base shards.
+
+    ``n_virtual`` clients share ``len(client_indices)`` underlying data
+    shards (client ``c`` samples from shard ``c % n_shards``), and the
+    per-client sampling generators are materialized LAZILY — only clients
+    that actually dispatch ever own a Generator, so a 100k-client fleet
+    costs memory proportional to the in-flight set, not the population.
+    Each lazy generator is seeded ``seed + 31 * c`` exactly like the eager
+    list, so a virtual client's batch stream is identical to what a fully
+    materialized dataset would have produced."""
+
+    n_virtual: int = 0
+
+    def __post_init__(self):
+        if self.n_virtual < 1:
+            raise ValueError(
+                f"n_virtual must be >= 1, got {self.n_virtual}")
+        self._rngs = {}                       # lazy: cid -> Generator
+
+    @property
+    def num_clients(self) -> int:
+        return self.n_virtual
+
+    def _indices(self, c: int) -> np.ndarray:
+        return self.client_indices[c % len(self.client_indices)]
+
+    def _rng_for(self, c: int) -> np.random.Generator:
+        g = self._rngs.get(c)
+        if g is None:
+            g = self._rngs[c] = np.random.default_rng(self.seed + 31 * c)
+        return g
+
+    # ---------------------------------------------- checkpointable rng state
+    def rng_states(self) -> dict:
+        """Only the touched generators — the untouched ones are recomputable
+        from the seed, so the checkpoint stays O(clients ever dispatched)."""
+        return {str(c): g.bit_generator.state for c, g in self._rngs.items()}
+
+    def load_rng_states(self, states: dict):
+        self._rngs = {}
+        for c, s in states.items():
+            g = np.random.default_rng(self.seed + 31 * int(c))
+            g.bit_generator.state = s
+            self._rngs[int(c)] = g

@@ -125,6 +125,17 @@ class ExecutionBackend(abc.ABC):
         return [self.execute(c, flops_per_client, payload_bytes, now)
                 for c in clients]
 
+    def execute_batch(self, clients: list, flops_per_client: float,
+                      payload_bytes: int, now: float) -> list[ClientExecution]:
+        """N async dispatches at the same instant (the concurrency top-up of
+        the batched mega-fleet engine).  Must consume every RNG stream in
+        the same per-client order as N sequential ``execute`` calls — the
+        engine-equivalence suite pins batched == per-event bit-identically.
+        The base implementation IS the sequential loop; backends override it
+        to amortise the per-dispatch overhead."""
+        return [self.execute(c, flops_per_client, payload_bytes, now)
+                for c in clients]
+
     def release(self, job_id: str, t: float):
         """The orchestrator observed this attempt's fate at sim-time ``t``
         and is done with it (fault arrivals cancel the backing job)."""
@@ -156,6 +167,15 @@ class ClosedFormBackend(ExecutionBackend):
     def execute_round(self, clients, flops_per_client, payload_bytes, now):
         # one vectorised call for the whole cohort: consumes the RNG exactly
         # as the legacy `simulate_round_times(clients, ...)` did
+        times = simulate_round_times(clients, flops_per_client, payload_bytes,
+                                     self.rng, self.straggler)
+        return [ClientExecution(work_s=float(t), run_s=float(t), site=c.site)
+                for c, t in zip(clients, times)]
+
+    def execute_batch(self, clients, flops_per_client, payload_bytes, now):
+        # one vectorised draw for the whole batch: `simulate_round_times`
+        # draws one lognormal per client in list order, exactly what N
+        # sequential execute() calls would have pulled from the stream
         times = simulate_round_times(clients, flops_per_client, payload_bytes,
                                      self.rng, self.straggler)
         return [ClientExecution(work_s=float(t), run_s=float(t), site=c.site)
@@ -243,6 +263,24 @@ class SchedulerBackend(ExecutionBackend):
     def resume(self, client, remaining_work_s, now):
         h = self._submit(client, remaining_work_s, now)
         return self._lookahead([h.job_id], [remaining_work_s], now)[0]
+
+    def execute_batch(self, clients, flops_per_client, payload_bytes, now):
+        """N dispatches at ``now`` with ONE pool-clone lookahead.
+
+        Work draws are batched (same per-client stream order as sequential
+        execute calls); each job still goes through the exact per-job
+        submit+settle sequence, so the adapters' submit-time randomness and
+        FIFO start decisions are byte-for-byte those of the per-event loop.
+        The lookahead clone is read-only and starts are strictly FIFO with
+        all randomness fixed at submit, so reading job i from a twin that
+        also carries the later-submitted jobs i+1..N yields the same
+        trajectory as N separate single-job lookaheads — that equivalence
+        is pinned by the engine-equivalence suite."""
+        works = [float(t) for t in simulate_round_times(
+            clients, flops_per_client, payload_bytes, self.rng,
+            self.straggler)]
+        handles = [self._submit(c, w, now) for c, w in zip(clients, works)]
+        return self._lookahead([h.job_id for h in handles], works, now)
 
     def execute_round(self, clients, flops_per_client, payload_bytes, now):
         works = [float(t) for t in simulate_round_times(

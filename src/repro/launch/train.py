@@ -29,9 +29,13 @@ from repro.data import (FederatedDataset, cifar10_like, medmnist_like,
                         shakespeare_like)
 from repro.models import build_model
 from repro.models.cnn import CIFAR_CNN, CNN, MEDMNIST_CNN
+from repro.core import payload_bytes
 from repro.exec import BACKEND_NAMES, make_backend
-from repro.orchestrator import (AsyncOrchestrator, FaultConfig, Orchestrator,
-                                StragglerPolicy, make_hybrid_fleet)
+from repro.orchestrator import (AsyncOrchestrator, BatchedAsyncOrchestrator,
+                                FaultConfig, Orchestrator, StragglerPolicy,
+                                equivalent_preempt_rate_per_min,
+                                make_hybrid_fleet)
+from repro.orchestrator.straggler import expected_attempt_s
 from repro.sched import HybridAdapter, JobSpec, K8sAdapter, SlurmAdapter
 
 
@@ -116,6 +120,21 @@ def main():
                          "--spot-preempt-prob draw)")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="async: commit every K buffered updates")
+    ap.add_argument("--engine", default="legacy",
+                    choices=["legacy", "batched"],
+                    help="async event engine: 'legacy' processes one event "
+                         "at a time; 'batched' defers client training into "
+                         "vmap chunks and batches dispatch (bit-identical "
+                         "trajectories — tests/test_megafleet_equivalence.py "
+                         "— but far fewer device round-trips)")
+    ap.add_argument("--train-chunk", type=int, default=32,
+                    help="batched engine: max vmap lanes per deferred "
+                         "training chunk")
+    ap.add_argument("--commit-chunk", type=int, default=0,
+                    help="async: accumulate the commit buffer this many "
+                         "slots at a time instead of stacking all K (0 = "
+                         "single-shot; chunked commits agree to ~1e-5, not "
+                         "bitwise — float summation order changes)")
     ap.add_argument("--staleness-exp", type=_staleness_exp, default=0.5,
                     help="async: staleness discount 1/(1+s)^a — a float, or "
                          "'adaptive' for the online FedAsync-style alpha "
@@ -174,18 +193,32 @@ def main():
     def build_backend():
         if args.exec_backend != "scheduler":
             return make_backend("closed-form")
-        if args.spot_preempt_prob:
-            print("warning: under --exec-backend scheduler spot preemptions "
-                  "originate from the K8s adapter's event stream; the "
-                  "injector's --spot-preempt-prob draw is disabled — use "
-                  "--spot-preempt-per-min to set the reclaim rate")
+        spot_rate = args.spot_preempt_per_min
+        if args.spot_preempt_prob and not spot_rate:
+            # under the scheduler backend spot preemptions originate from
+            # the K8s adapter's reclaim events, not an injector draw — map
+            # the per-ATTEMPT Bernoulli probability onto the equivalent
+            # per-minute exponential rate at this fleet's mean attempt time
+            mean_s = expected_attempt_s(
+                fleet, 3e12, payload_bytes(params, fl.compression),
+                StragglerPolicy())
+            spot_rate = equivalent_preempt_rate_per_min(
+                args.spot_preempt_prob, mean_s)
+            print(f"scheduler backend: mapped --spot-preempt-prob "
+                  f"{args.spot_preempt_prob:g}/attempt onto "
+                  f"{spot_rate:.4f} reclaims/min "
+                  f"(mean attempt {mean_s:.1f}s)")
+        elif args.spot_preempt_prob:
+            print("warning: --spot-preempt-per-min overrides the "
+                  "--spot-preempt-prob mapping under --exec-backend "
+                  "scheduler")
         cloud = args.cloud_nodes or n_cloud
         return make_backend(
             "scheduler",
             slurm=SlurmAdapter(total_nodes=args.hpc_nodes or n_hpc,
                                seed=args.seed),
             k8s=K8sAdapter(initial_nodes=max(1, cloud // 2), max_nodes=cloud,
-                           preempt_prob_per_min=args.spot_preempt_per_min,
+                           preempt_prob_per_min=spot_rate,
                            seed=args.seed + 1))
     fl = FLConfig(
         mode=args.mode,
@@ -215,19 +248,24 @@ def main():
                   "discounting replaces them)")
         mgr = (AsyncCheckpointManager(args.checkpoint_dir)
                if args.checkpoint_dir else None)
-        orch = AsyncOrchestrator(
+        orch_cls = (BatchedAsyncOrchestrator if args.engine == "batched"
+                    else AsyncOrchestrator)
+        engine_kw = ({"train_chunk": args.train_chunk}
+                     if args.engine == "batched" else {})
+        orch = orch_cls(
             fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
             async_cfg=AsyncConfig(buffer_size=args.buffer_k,
                                   staleness_exponent=args.staleness_exp,
                                   max_staleness=args.max_staleness,
                                   commit_timeout_s=args.commit_timeout,
-                                  max_concurrency=args.max_concurrency),
+                                  max_concurrency=args.max_concurrency,
+                                  commit_chunk=args.commit_chunk),
             server_opt_name=args.server_opt, selection_name=args.selection,
             straggler=StragglerPolicy(), faults=faults,
             batch_size=args.batch_size, flops_per_client_round=3e12,
             eval_fn=eval_fn, eval_every=10, checkpoint_mgr=mgr,
             checkpoint_every=args.checkpoint_every,
-            backend=build_backend(), seed=args.seed)
+            backend=build_backend(), seed=args.seed, **engine_kw)
         server_state = None
         if args.resume and mgr.latest_round() is not None:
             params, server_state = mgr.restore_async(orch, params)
@@ -238,7 +276,7 @@ def main():
                              verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "async",
-            "exec_backend": args.exec_backend,
+            "exec_backend": args.exec_backend, "engine": args.engine,
             "secure_agg": args.secure_agg,
             "mask_overhead_bytes": sum(l.mask_overhead_bytes
                                        for l in orch.logs),

@@ -1,6 +1,9 @@
 from repro.orchestrator.registry import ClientInfo, ResourceProfile, make_hybrid_fleet  # noqa: F401
 from repro.orchestrator.selection import AdaptiveSelection, RandomSelection, get_selection  # noqa: F401
 from repro.orchestrator.straggler import StragglerPolicy, apply_mitigation, simulate_round_times  # noqa: F401
-from repro.orchestrator.fault import FaultConfig, FaultInjector  # noqa: F401
+from repro.orchestrator.fault import FaultConfig, FaultInjector, equivalent_preempt_rate_per_min  # noqa: F401
 from repro.orchestrator.server import Orchestrator, RoundLog  # noqa: F401
 from repro.orchestrator.async_server import AsyncOrchestrator, CommitLog, PendingUpdate  # noqa: F401
+from repro.orchestrator.megafleet import (  # noqa: F401
+    BatchedAsyncOrchestrator, CohortFleet, CohortSpec, make_mega_fleet,
+)

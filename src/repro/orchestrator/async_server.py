@@ -30,6 +30,7 @@ import numpy as np
 from repro.comm.transport import CommAccountant, link_for_site
 from repro.core.async_round import (AdaptiveStalenessController, AsyncConfig,
                                     build_buffer_commit_step,
+                                    build_chunked_commit_steps,
                                     build_client_update_step)
 from repro.core.compression import payload_bytes
 from repro.core.secure_agg import masked_payload_bytes
@@ -139,6 +140,16 @@ class AsyncOrchestrator:
             self.loss_fn, client_opt, self.fl))
         self._commit_step = jax.jit(build_buffer_commit_step(
             server_opt, self.fl, self.async_cfg))
+        # chunked commit: accumulate the buffer C slots at a time (one
+        # device call per chunk) and normalise/apply once.  Only engaged
+        # when the chunk is smaller than the buffer — otherwise the
+        # single-shot step is strictly better (and bit-identical to the
+        # pre-chunk behaviour).
+        self._chunk_steps = None
+        if 0 < self.async_cfg.commit_chunk < self.async_cfg.buffer_size:
+            acc_step, fin_step = build_chunked_commit_steps(
+                server_opt, self.fl, self.async_cfg)
+            self._chunk_steps = (jax.jit(acc_step), jax.jit(fin_step))
         # staleness exponent: a constant, or an online controller whose alpha
         # feeds the jit'd commit step as a runtime scalar (no recompiles)
         self._staleness_ctrl = (AdaptiveStalenessController()
@@ -195,26 +206,49 @@ class AsyncOrchestrator:
         upd.loss = float(loss)
         upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
 
-    def _dispatch_one(self, params, now: float):
-        """Hand the current params to one idle client; schedule its arrival."""
+    def _pick_client(self, rnd: int):
+        """Select one idle client: (client_idx, client), or None when every
+        client is in flight.  ``rnd`` is the dispatch counter the selection
+        strategy scores aging against (the seq the dispatch will get)."""
         avail = [c for c in self.fleet if c.cid not in self._inflight]
         if not avail:
-            return False
-        sel = self.selection.select(avail, 1, self._seq)
+            return None
+        sel = self.selection.select(avail, 1, rnd)
         client_idx = next(i for i, c in enumerate(self.fleet)
                           if c.cid == sel[0])
-        client = self.fleet[client_idx]
-        down_bytes, up_bytes = self._payload_bytes_cache(params)
-        ex = self.backend.execute(client, self.flops_per_client_round,
-                                  up_bytes, now)
+        return client_idx, self.fleet[client_idx]
+
+    def _execute_attempt(self, client, params, now: float):
+        """Price one attempt through the execution backend."""
+        up_bytes = self._payload_bytes_cache(params)[1]
+        return self.backend.execute(client, self.flops_per_client_round,
+                                    up_bytes, now)
+
+    def _draw_attempt_fault(self, client):
         # the injector's round clock advances per COMMIT (the async analogue
         # of a round, in _do_commit) so FaultConfig partition probabilities /
         # durations keep their sync-round units; the fault dice — cause and
         # strike time included — roll per dispatch.  When the backend's own
         # event stream produces spot preemptions, the injector must not also
         # reclaim the instance.
-        failed, fault, frac = self.fault_injector.draw_fault(
+        return self.fault_injector.draw_fault(
             client, include_preempt=not self.backend.handles_preemption)
+
+    def _dispatch_one(self, params, now: float):
+        """Hand the current params to one idle client; schedule its arrival."""
+        picked = self._pick_client(self._seq)
+        if picked is None:
+            return False
+        client_idx, client = picked
+        ex = self._execute_attempt(client, params, now)
+        self._finish_dispatch(client_idx, client, ex, params, now)
+        return True
+
+    def _finish_dispatch(self, client_idx, client, ex, params, now: float):
+        """Everything after the attempt is priced: fault dice, optional
+        local training, comm ledger, and the arrival event."""
+        down_bytes, up_bytes = self._payload_bytes_cache(params)
+        failed, fault, frac = self._draw_attempt_fault(client)
 
         upd = PendingUpdate(seq=self._seq, cid=client.cid,
                             client_idx=client_idx,
@@ -250,7 +284,13 @@ class AsyncOrchestrator:
         self._inflight.add(client.cid)
         heapq.heappush(self._events, (arrival, self._seq, upd))
         self._seq += 1
-        return True
+
+    def _top_up(self, params):
+        """Dispatch until max_concurrency clients are in flight (a
+        continuation or restored run may already have some)."""
+        target = min(self.async_cfg.max_concurrency, len(self.fleet))
+        for _ in range(max(0, target - len(self._inflight))):
+            self._dispatch_one(params, self.clock)
 
     # ------------------------------------------------------------- recovery
     def _choose_recovery(self, upd: PendingUpdate, t: float) -> str:
@@ -369,15 +409,67 @@ class AsyncOrchestrator:
         ids = jnp.arange(K, dtype=jnp.int32)
         return stacked, weights, staleness, losses, mask, ids, stal, ups
 
+    def _materialize(self):
+        """Deferred-training hook: engines that defer the jit'd client
+        update at dispatch time (BatchedAsyncOrchestrator) compute every
+        pending delta here, in batched chunks.  Called before any code that
+        reads ``upd.delta``/``upd.loss`` — the commit below and the
+        checkpoint serializer.  No-op in the per-event engine (deltas are
+        computed eagerly at dispatch)."""
+
+    def engine_state(self) -> dict:
+        """Engine-private checkpoint payload (beyond the shared serializer's
+        fields).  The per-event engine has none."""
+        return {}
+
+    def _after_restore(self):
+        """Called by the checkpoint loader after all shared state is in
+        place, so engines can rebuild derived structures (cohort counters,
+        deferred-job caches).  No-op in the per-event engine."""
+
+    def _commit_chunked(self, params, server_state, ups, stal, alpha, r):
+        """Accumulate the buffer C slots at a time: one device call per
+        chunk plus one finalize, instead of stacking all K slots into a
+        single [K, ...] tree.  Chunk k derives its rng by fold_in(r, k) and
+        uses arange(C) slot ids, so secure-agg masks cancel chunk-locally."""
+        C = self.async_cfg.commit_chunk
+        acc_step, fin_step = self._chunk_steps
+        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        wsum = jnp.float32(0.0)
+        ids = jnp.arange(C, dtype=jnp.int32)
+        for k, lo in enumerate(range(0, len(ups), C)):
+            chunk = ups[lo:lo + C]
+            pad = C - len(chunk)
+            zero = jax.tree.map(jnp.zeros_like, chunk[0].delta)
+            deltas = [u.delta for u in chunk] + [zero] * pad
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+            weights = jnp.asarray([u.weight for u in chunk] + [0.0] * pad,
+                                  jnp.float32)
+            staleness = jnp.asarray(stal[lo:lo + C] + [0] * pad, jnp.float32)
+            losses = jnp.asarray([u.loss for u in chunk] + [0.0] * pad,
+                                 jnp.float32)
+            mask = jnp.asarray([1.0] * len(chunk) + [0.0] * pad, jnp.float32)
+            acc, wsum = acc_step(acc, wsum, stacked, weights, staleness,
+                                 losses, mask, ids, jnp.float32(alpha),
+                                 jax.random.fold_in(r, k))
+        return fin_step(params, server_state, acc, wsum)
+
     def _do_commit(self, params, server_state, at_time: float,
                    timeout: bool = False):
-        (stacked, weights, staleness, losses, mask, ids, stal,
-         ups) = self._stack_buffer()
+        self._materialize()
+        ups = [u for u, _ in self._buffer]
+        stal = [self.version - u.dispatch_version for u in ups]
         self.jrng, r = jax.random.split(self.jrng)
         alpha = self._alpha
-        params, server_state, metrics = self._commit_step(
-            params, server_state, stacked, weights, staleness, losses, mask,
-            ids, jnp.float32(alpha), r)
+        if self._chunk_steps is not None:
+            params, server_state, metrics = self._commit_chunked(
+                params, server_state, ups, stal, alpha, r)
+        else:
+            stacked, weights, staleness, losses, mask, ids, _, _ = \
+                self._stack_buffer()
+            params, server_state, metrics = self._commit_step(
+                params, server_state, stacked, weights, staleness, losses,
+                mask, ids, jnp.float32(alpha), r)
         self.version += 1
         self.fault_injector.step_round()
         self.updates_applied += len(ups)
@@ -445,11 +537,7 @@ class AsyncOrchestrator:
         """Run until `num_commits` server commits (or `max_sim_time`)."""
         if server_state is None:
             server_state = self.init_server_state(params)
-        # top up to the concurrency cap; a continuation or restored run may
-        # already have clients in flight (their events live in the heap)
-        target = min(self.async_cfg.max_concurrency, len(self.fleet))
-        for _ in range(max(0, target - len(self._inflight))):
-            self._dispatch_one(params, self.clock)
+        self._top_up(params)
 
         last_ckpt = self.version
         while self._events and self.version < num_commits:

@@ -37,6 +37,35 @@ RECOVERABLE_FAULTS = ("preempt", "partition")
 RECOVERY_POLICIES = ("restart", "resume", "discard", "adaptive")
 
 
+def equivalent_preempt_rate_per_min(p_attempt: float,
+                                    mean_attempt_s: float) -> float:
+    """Map ``FaultConfig.spot_preempt_prob`` (per-ATTEMPT Bernoulli) onto the
+    memoryless reclaim rate (per minute) of ``K8sAdapter.preempt_prob_per_min``.
+
+    The K8s adapter reclaims a preemptible pod at an exponential
+    time-to-preemption with rate ``lam`` per minute, so an attempt holding
+    its node for ``d`` seconds is struck with probability
+    ``1 - exp(-lam * d / 60)``.  Equating that to the injector's per-attempt
+    ``p`` at the fleet's mean attempt duration gives
+
+        lam = -ln(1 - p) * 60 / mean_attempt_s
+
+    which lets ``--exec-backend scheduler`` reproduce injector-era fault
+    tables from the same ``--spot-preempt-prob`` knob instead of demanding a
+    hand-retuned ``--spot-preempt-per-min``.  Use
+    ``straggler.expected_attempt_s`` for ``mean_attempt_s``."""
+    if p_attempt <= 0.0:
+        return 0.0
+    if p_attempt >= 1.0:
+        raise ValueError(
+            f"spot_preempt_prob must be < 1 to map onto a finite reclaim "
+            f"rate, got {p_attempt}")
+    if mean_attempt_s <= 0.0:
+        raise ValueError(
+            f"mean_attempt_s must be positive, got {mean_attempt_s}")
+    return float(-np.log1p(-p_attempt) * 60.0 / mean_attempt_s)
+
+
 @dataclass
 class FaultConfig:
     dropout_prob: float = 0.0       # uniform per-round client dropout

@@ -1,0 +1,366 @@
+"""Mega-fleet batched async engine: the event loop at 100k+ clients.
+
+``AsyncOrchestrator`` processes one Python-level event per client attempt
+and pays a device round-trip per update (the ``float(loss)`` sync inside
+``_train_client``) — profiling shows those syncs plus the O(N) per-dispatch
+selection scan dominating wall time from ~1k clients.  This module keeps
+the event-exact semantics (heap order, RNG streams, commit policy,
+checkpoint format) and changes only WHERE the work happens:
+
+  * deferred training — ``_train_client`` records a ``_TrainJob`` (params
+    snapshot ref, host batches, pre-split jax key) instead of running the
+    jit'd update; jobs are materialized lazily at the next commit/checkpoint
+    in power-of-two vmap buckets grouped by params version, with ONE host
+    sync per bucket for the losses.  Every host-side RNG draw (selection,
+    work time, fault dice, batch sampling, jrng split) still happens at
+    dispatch in the legacy order, so each stream's sequence is untouched —
+    and a vmap lane is bit-identical to the single-example call, so the
+    engine is bit-identical to the per-event loop (pinned by
+    tests/test_megafleet_equivalence.py, including secure-agg, the
+    scheduler backend, faults and kill/--resume).
+  * batched top-up — the initial concurrency fill prices all dispatches
+    through ``ExecutionBackend.execute_batch`` (one vectorised noise draw;
+    one pool-clone lookahead under the scheduler backend).
+  * cohort fleet model (populations >= 10k) — ``CohortFleet`` materializes
+    a ``ClientInfo`` only when a client first dispatches, dispatch picks
+    uniformly over IDLE clients in O(#cohorts) (the per-client adaptive
+    scoring loop is the 1k-fleet bottleneck and is O(N) by construction),
+    and identically-profiled clients SHARE sampled duration/fault draws in
+    blocks of ``cohort_share_draws``.  Cohort mode is an explicit modelling
+    approximation — faults arrive correlated within a share-block and
+    selection is uniform — so it is NOT legacy-bit-identical; it is
+    deterministic and checkpoint/resume-exact, which the scale tests pin.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_round import build_client_update_step
+from repro.optim import get_client_optimizer
+from repro.orchestrator.async_server import AsyncOrchestrator
+from repro.orchestrator.registry import ClientInfo, ResourceProfile
+from repro.orchestrator.straggler import attempt_time
+
+
+# ---------------------------------------------------------------- cohorts
+@dataclass(frozen=True)
+class CohortSpec:
+    """One block of identically-provisioned clients."""
+    name: str
+    site: str                      # "hpc" | "cloud"
+    count: int
+    profile: ResourceProfile
+
+
+class CohortFleet:
+    """A lazy, list-like fleet: ``len``/indexing like ``list[ClientInfo]``,
+    but a client object exists only once it has dispatched.  Client ids are
+    contiguous per cohort (cohort j owns [offset(j), offset(j)+count))."""
+
+    def __init__(self, cohorts: list[CohortSpec]):
+        self.cohorts = [c for c in cohorts if c.count > 0]
+        if not self.cohorts:
+            raise ValueError("CohortFleet needs at least one non-empty cohort")
+        self._offsets = np.cumsum([0] + [c.count for c in self.cohorts])
+        self._live: dict[int, ClientInfo] = {}
+
+    def __len__(self) -> int:
+        return int(self._offsets[-1])
+
+    def _check(self, cid: int):
+        if not 0 <= cid < len(self):
+            raise IndexError(cid)
+
+    def cohort_of(self, cid: int) -> int:
+        self._check(cid)
+        return int(np.searchsorted(self._offsets, cid, side="right") - 1)
+
+    def offset(self, j: int) -> int:
+        return int(self._offsets[j])
+
+    def __getitem__(self, cid: int) -> ClientInfo:
+        self._check(cid)
+        c = self._live.get(cid)
+        if c is None:
+            spec = self.cohorts[self.cohort_of(cid)]
+            c = self._live[cid] = ClientInfo(cid, spec.site, spec.profile)
+        return c
+
+    @property
+    def live(self) -> dict[int, ClientInfo]:
+        """Materialized clients (those that ever dispatched) — what the
+        checkpoint serialises instead of the full population."""
+        return self._live
+
+
+def make_mega_fleet(n_clients: int, seed: int = 0,
+                    spot_frac: float = 0.4) -> CohortFleet:
+    """The §5.1 hybrid testbed scaled to ``n_clients``, as cohorts.
+
+    Same population structure as ``make_hybrid_fleet`` (half HPC with a
+    70% GPU split, half cloud with a 50% GPU split and ``spot_frac``
+    preemptible), but each cohort draws ONE representative profile from the
+    same distributions instead of per-client draws — the cohort model's
+    defining approximation."""
+    rng = np.random.default_rng(seed)
+    n_hpc = n_clients // 2
+    n_cloud = n_clients - n_hpc
+    n_hpc_gpu = int(0.7 * n_hpc)
+    n_cloud_gpu = int(0.5 * n_cloud)
+    n_cloud_cpu = n_cloud - n_cloud_gpu
+
+    def cloud_prof(tf_mu, tf_sd, mem, spot):
+        return ResourceProfile(
+            compute_tflops=float(rng.normal(tf_mu, tf_sd)),
+            bandwidth_gbps=float(rng.uniform(0.5, 1.25)),
+            latency_ms=float(rng.uniform(5, 40)),
+            memory_gb=mem, reliability=0.98, spot=spot)
+
+    hpc_gpu = ResourceProfile(float(rng.normal(16.3, 1.0)), 12.5, 0.05,
+                              24.0, reliability=0.995)
+    hpc_cpu = ResourceProfile(float(rng.normal(1.0, 0.1)), 12.5, 0.05,
+                              8.0, reliability=0.995)
+    n_gpu_spot = int(round(spot_frac * n_cloud_gpu))
+    n_cpu_spot = int(round(spot_frac * n_cloud_cpu))
+    return CohortFleet([
+        CohortSpec("hpc-gpu", "hpc", n_hpc_gpu, hpc_gpu),
+        CohortSpec("hpc-cpu", "hpc", n_hpc - n_hpc_gpu, hpc_cpu),
+        CohortSpec("cloud-gpu", "cloud", n_cloud_gpu - n_gpu_spot,
+                   cloud_prof(15.7, 1.5, 16.0, False)),
+        CohortSpec("cloud-gpu-spot", "cloud", n_gpu_spot,
+                   cloud_prof(15.7, 1.5, 16.0, True)),
+        CohortSpec("cloud-cpu", "cloud", n_cloud_cpu - n_cpu_spot,
+                   cloud_prof(0.4, 0.05, 8.0, False)),
+        CohortSpec("cloud-cpu-spot", "cloud", n_cpu_spot,
+                   cloud_prof(0.4, 0.05, 8.0, True)),
+    ])
+
+
+class _CohortInflight(set):
+    """The in-flight cid set, with an O(1) per-cohort busy counter so cohort
+    dispatch never walks the set."""
+
+    def __init__(self, fleet: CohortFleet):
+        super().__init__()
+        self._fleet = fleet
+        self.by_cohort = np.zeros(len(fleet.cohorts), np.int64)
+
+    def add(self, cid):
+        if cid not in self:
+            self.by_cohort[self._fleet.cohort_of(cid)] += 1
+        super().add(cid)
+
+    def discard(self, cid):
+        if cid in self:
+            self.by_cohort[self._fleet.cohort_of(cid)] -= 1
+        super().discard(cid)
+
+
+# ----------------------------------------------------------------- engine
+@dataclass
+class _TrainJob:
+    """One deferred local-training call, fixed at dispatch time."""
+    upd: object                    # the PendingUpdate awaiting delta/loss
+    params: object                 # params snapshot REF (replaced per commit,
+    #                                never mutated, so holding it is free)
+    batches: dict                  # host-side sampled batches [H, b, ...]
+    key: object                    # the jrng key split for this dispatch
+
+
+@dataclass
+class BatchedAsyncOrchestrator(AsyncOrchestrator):
+    """Drop-in ``AsyncOrchestrator`` with deferred chunked-vmap training,
+    batched top-up dispatch, and the cohort fleet model when ``fleet`` is a
+    ``CohortFleet``.  On flat (list) fleets it is bit-identical to the
+    per-event engine; on cohort fleets it is deterministic + resume-exact
+    under the cohort model's shared-draw approximation."""
+
+    train_chunk: int = 32          # max vmap lanes per materialize call
+    cohort_share_draws: int = 8    # dispatches per shared duration/fault draw
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.train_chunk < 1:
+            raise ValueError(
+                f"train_chunk must be >= 1, got {self.train_chunk}")
+        if self.cohort_share_draws < 1:
+            raise ValueError(f"cohort_share_draws must be >= 1, got "
+                             f"{self.cohort_share_draws}")
+        self._jobs: dict[int, _TrainJob] = {}     # seq -> deferred training
+        self._vstep_cache: dict[int, object] = {}  # lanes -> jit(vmap(step))
+        self._update_fn = build_client_update_step(
+            self.loss_fn, get_client_optimizer(self.client_opt_name), self.fl)
+        self._cohort_mode = isinstance(self.fleet, CohortFleet)
+        self._cohort_draws: dict[int, dict] = {}  # cohort -> shared block
+        if self._cohort_mode:
+            self._inflight = _CohortInflight(self.fleet)
+            self._cohort_counts = np.array(
+                [c.count for c in self.fleet.cohorts], np.int64)
+
+    # --------------------------------------------------- deferred training
+    def _train_client(self, upd, client, params):
+        """Record the training call; the jit'd update runs at materialize
+        time.  All RNG draws (batch sampling, jrng split) happen HERE, in
+        dispatch order, exactly like the eager engine."""
+        batches = self.fed_data.sample_round([client.cid],
+                                             self.fl.local_steps,
+                                             self.batch_size)
+        batches = jax.tree.map(lambda x: np.asarray(x[0]), batches)
+        self.jrng, r = jax.random.split(self.jrng)
+        upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
+        # a restart retry re-enters here with the same seq: the stale job is
+        # simply replaced (the eager engine wasted that training up front)
+        self._jobs[upd.seq] = _TrainJob(upd, params, batches, r)
+
+    def _materialize(self):
+        if not self._jobs:
+            return
+        # group by params snapshot (dispatch version), preserving seq order
+        # within each group; chunk each group into vmap buckets
+        groups: dict[int, list[_TrainJob]] = {}
+        for seq in sorted(self._jobs):
+            job = self._jobs[seq]
+            groups.setdefault(id(job.params), []).append(job)
+        for jobs in groups.values():
+            for lo in range(0, len(jobs), self.train_chunk):
+                self._run_chunk(jobs[lo:lo + self.train_chunk])
+        self._jobs.clear()
+
+    def _run_chunk(self, jobs: list[_TrainJob]):
+        """vmap one bucket of same-snapshot jobs; one host sync (the loss
+        fetch) for the whole bucket.  Buckets are padded to the next power
+        of two by repeating lane 0 — a vmap lane is bit-identical to the
+        single call, and padded lanes are discarded — so the compile cache
+        holds log2(train_chunk) entries, not one per bucket length."""
+        n = len(jobs)
+        lanes = 1 << max(n - 1, 0).bit_length()
+        step = self._vstep_cache.get(lanes)
+        if step is None:
+            step = self._vstep_cache[lanes] = jax.jit(
+                jax.vmap(self._update_fn, in_axes=(None, 0, 0)))
+        pick = list(range(n)) + [0] * (lanes - n)
+        batches = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
+                               *[jobs[i].batches for i in pick])
+        keys = jnp.stack([jobs[i].key for i in pick])
+        deltas, losses = step(jobs[0].params, batches, keys)
+        lv = np.asarray(losses)                     # ONE sync per bucket
+        for i, job in enumerate(jobs):
+            job.upd.delta = jax.tree.map(lambda d: d[i], deltas)
+            job.upd.loss = float(lv[i])
+
+    # ----------------------------------------------------- batched top-up
+    def _top_up(self, params):
+        if self._cohort_mode:
+            # cohort dispatch is O(#cohorts) with amortised shared draws —
+            # the per-dispatch path is already cheap, and the shared-draw
+            # cache must interleave exactly as in steady-state dispatch
+            return super()._top_up(params)
+        target = min(self.async_cfg.max_concurrency, len(self.fleet))
+        picks = []
+        for _ in range(max(0, target - len(self._inflight))):
+            picked = self._pick_client(self._seq + len(picks))
+            if picked is None:
+                break
+            # claim the slot now so the next pick's availability view
+            # matches the sequential engine's
+            self._inflight.add(picked[1].cid)
+            picks.append(picked)
+        if not picks:
+            return
+        up_bytes = self._payload_bytes_cache(params)[1]
+        exs = self.backend.execute_batch(
+            [c for _, c in picks], self.flops_per_client_round, up_bytes,
+            self.clock)
+        for (client_idx, client), ex in zip(picks, exs):
+            self._finish_dispatch(client_idx, client, ex, params, self.clock)
+
+    # ----------------------------------------------------- cohort dispatch
+    def _cohort_draw(self, client) -> dict:
+        """The cohort's current shared draw block: one contention noise and
+        one fault fate reused for ``cohort_share_draws`` dispatches."""
+        j = self.fleet.cohort_of(client.cid)
+        e = self._cohort_draws.get(j)
+        if e is None or e["left"] <= 0:
+            e = self._cohort_draws[j] = {
+                "noise": float(self.rng.lognormal(
+                    0.0, self.straggler.contention_sigma)),
+                "fate": list(self.fault_injector.draw_fault(
+                    client,
+                    include_preempt=not self.backend.handles_preemption)),
+                "left": int(self.cohort_share_draws)}
+        return e
+
+    def _pick_client(self, rnd: int):
+        if not self._cohort_mode:
+            return super()._pick_client(rnd)
+        idle = self._cohort_counts - self._inflight.by_cohort
+        total = int(idle.sum())
+        if total <= 0:
+            return None
+        # cohort ∝ idle count, then a uniform idle member: exactly uniform
+        # over idle clients.  Per-client adaptive scoring is O(N) per
+        # dispatch by construction — at mega scale selection pressure comes
+        # from the cohort weights, and uniform-over-idle is the FedAvg
+        # baseline the paper's ablation uses.
+        rng = self.selection.rng
+        j = int(rng.choice(len(idle), p=idle / total))
+        base, count = self.fleet.offset(j), int(self._cohort_counts[j])
+        for _ in range(64):                        # rejection: P(hit) = idle/count
+            cid = base + int(rng.integers(count))
+            if cid not in self._inflight:
+                break
+        else:  # nearly-saturated cohort: enumerate its idle members once
+            free = [c for c in range(base, base + count)
+                    if c not in self._inflight]
+            cid = int(free[int(rng.integers(len(free)))])
+        return cid, self.fleet[cid]
+
+    def _execute_attempt(self, client, params, now):
+        if self._cohort_mode and not self.backend.handles_preemption:
+            # closed-form pricing with the cohort's shared noise draw
+            # (local import: repro.exec depends on this package's straggler
+            # model, so a module-level import would be circular)
+            from repro.exec.backend import ClientExecution
+            up_bytes = self._payload_bytes_cache(params)[1]
+            w = attempt_time(client.profile, self.flops_per_client_round,
+                             up_bytes, self._cohort_draw(client)["noise"])
+            return ClientExecution(work_s=w, run_s=w, site=client.site)
+        return super()._execute_attempt(client, params, now)
+
+    def _draw_attempt_fault(self, client):
+        if not self._cohort_mode:
+            return super()._draw_attempt_fault(client)
+        e = self._cohort_draw(client)
+        e["left"] -= 1
+        failed, kind, frac = e["fate"]
+        return bool(failed), str(kind), float(frac)
+
+    # ------------------------------------------------ checkpointable state
+    def engine_state(self) -> dict:
+        """Engine-private state beyond the base serializer's reach.  Pending
+        train jobs are materialized before any save (the serializer calls
+        ``_materialize``), so only the cohort shared-draw blocks remain."""
+        if not self._cohort_draws:
+            return {}
+        return {"cohort_draws": {str(j): dict(e)
+                                 for j, e in self._cohort_draws.items()}}
+
+    def load_engine_state(self, s: dict):
+        self._cohort_draws = {
+            int(j): {"noise": float(e["noise"]), "fate": list(e["fate"]),
+                     "left": int(e["left"])}
+            for j, e in s.get("cohort_draws", {}).items()}
+
+    def _after_restore(self):
+        # restored deltas are eager; cohort draw blocks were already loaded
+        # by load_engine_state (or stay empty on a flat-fleet snapshot)
+        self._jobs.clear()
+        if self._cohort_mode:
+            infl = _CohortInflight(self.fleet)
+            for cid in self._inflight:
+                infl.add(cid)
+            self._inflight = infl

@@ -23,15 +23,36 @@ class StragglerPolicy:
     contention_sigma: float = 0.25  # lognormal compute-noise (shared nodes)
 
 
+def attempt_time(profile, flops_per_client: float, payload_bytes: int,
+                 noise: float) -> float:
+    """One attempt's wall time given an already-drawn contention noise.
+
+    Factored out of ``simulate_round_times`` so callers that SHARE a noise
+    draw across identically-profiled clients (the cohort-level mega-fleet
+    model) price an attempt with the exact same arithmetic."""
+    compute = flops_per_client / (profile.compute_tflops * 1e12) * noise
+    transfer = (2 * payload_bytes) / (profile.bandwidth_gbps * 1e9 / 8)
+    return float(compute + transfer + 2 * profile.latency_ms * 1e-3)
+
+
+def expected_attempt_s(clients: list[ClientInfo], flops_per_client: float,
+                       payload_bytes: int, policy: StragglerPolicy) -> float:
+    """Fleet-mean closed-form attempt duration, in expectation over the
+    contention noise: E[lognormal(0, sigma)] = exp(sigma^2 / 2).  This is
+    the duration scale that converts the injector's per-ATTEMPT fault
+    probabilities into per-minute rates (fault.equivalent_preempt_rate_per_min)."""
+    noise = float(np.exp(policy.contention_sigma ** 2 / 2.0))
+    return float(np.mean([attempt_time(c.profile, flops_per_client,
+                                       payload_bytes, noise)
+                          for c in clients]))
+
+
 def simulate_round_times(clients: list[ClientInfo], flops_per_client: float,
                          payload_bytes: int, rng: np.random.Generator,
                          policy: StragglerPolicy) -> np.ndarray:
-    times = []
-    for c in clients:
-        noise = rng.lognormal(0.0, policy.contention_sigma)
-        compute = flops_per_client / (c.profile.compute_tflops * 1e12) * noise
-        transfer = (2 * payload_bytes) / (c.profile.bandwidth_gbps * 1e9 / 8)
-        times.append(compute + transfer + 2 * c.profile.latency_ms * 1e-3)
+    times = [attempt_time(c.profile, flops_per_client, payload_bytes,
+                          rng.lognormal(0.0, policy.contention_sigma))
+             for c in clients]
     return np.asarray(times)
 
 

@@ -342,3 +342,65 @@ def test_adaptive_recovery_resumes_mostly_done_work():
                           dispatch_time=0.0, duration_s=10.0, work_s=10.0,
                           fault="preempt", steps_done=0)
     assert orch._choose_recovery(stale, 99.0) == "discard"
+
+
+# ----------------------------------------- spot-preempt-prob rate mapping
+def test_equivalent_preempt_rate_math():
+    from repro.orchestrator import equivalent_preempt_rate_per_min
+
+    # P(strike within one mean-length attempt) must reproduce p_attempt:
+    # strikes are exponential with rate lam/min, so
+    # 1 - exp(-lam * t_mean/60) == p
+    for p, mean_s in [(0.1, 30.0), (0.3, 90.0), (0.7, 5.0)]:
+        lam = equivalent_preempt_rate_per_min(p, mean_s)
+        assert abs(1.0 - np.exp(-lam * mean_s / 60.0) - p) < 1e-12
+    assert equivalent_preempt_rate_per_min(0.0, 10.0) == 0.0
+    assert equivalent_preempt_rate_per_min(-0.5, 10.0) == 0.0
+    with pytest.raises(ValueError):
+        equivalent_preempt_rate_per_min(1.0, 10.0)
+    with pytest.raises(ValueError):
+        equivalent_preempt_rate_per_min(0.5, 0.0)
+
+
+def test_spot_preempt_prob_maps_onto_adapter_rate():
+    """ROADMAP item: a closed-form run with FaultConfig.spot_preempt_prob
+    (per-attempt Bernoulli) and a scheduler run whose K8s adapter reclaims
+    at the equivalent exponential per-minute rate must both actually
+    preempt, at broadly comparable frequency — and only spot clients.
+    Counts are pinned per-seed as a regression anchor for the mapping."""
+    from repro.core import payload_bytes
+    from repro.orchestrator import equivalent_preempt_rate_per_min
+    from repro.orchestrator.straggler import expected_attempt_s
+
+    p_attempt = 0.3
+    n_commits = 8
+
+    cf_orch, params = async_orch(
+        None, faults=FaultConfig(spot_preempt_prob=p_attempt,
+                                 recovery_policy="discard"))
+    cf_orch.run(params, n_commits)
+    cf_pre = [e for e in cf_orch.events_processed if e[4] == "preempt"]
+
+    mean_s = expected_attempt_s(
+        cf_orch.fleet, 2e12,
+        payload_bytes(params, cf_orch.fl.compression),
+        StragglerPolicy(contention_sigma=0.5))
+    rate = equivalent_preempt_rate_per_min(p_attempt, mean_s)
+
+    sb_orch, params2 = async_orch(
+        SchedulerBackend(uncontended_pool(preempt_per_min=rate)),
+        faults=FaultConfig(recovery_policy="discard"))
+    sb_orch.run(params2, n_commits)
+    sb_pre = [e for e in sb_orch.events_processed if e[4] == "preempt"]
+
+    assert cf_pre and sb_pre, "one of the regimes never preempted"
+    spot_cids = {c.cid for c in sb_orch.fleet if c.profile.spot}
+    assert {e[2] for e in sb_pre} <= spot_cids
+    # per-attempt spot preempt frequency: same order of magnitude (the
+    # adapter only strikes RUNNING preemptible pods, so some shortfall vs
+    # the injector's unconditional per-attempt dice is expected)
+    cf_frac = len(cf_pre) / len(cf_orch.events_processed)
+    sb_frac = len(sb_pre) / len(sb_orch.events_processed)
+    assert 0.2 <= sb_frac / cf_frac <= 5.0, (cf_frac, sb_frac)
+    # regression anchor: exact per-seed counts under the fixed seed
+    assert (len(cf_pre), len(sb_pre)) == (1, 1)

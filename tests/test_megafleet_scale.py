@@ -1,0 +1,77 @@
+"""Mega-fleet scale smoke (CI fast lane, ``-m scale``): a 10k-client async
+simulation must complete a fixed commit budget inside a wall-clock budget,
+with memory-proportional-to-participants laziness actually holding.
+
+The budget is deliberately loose (the run takes ~2 s locally including jit
+compiles) — the test exists to catch accidental O(population) work creeping
+into dispatch, checkpointing, or dataset sampling, which shows up as a
+10-100x blowup, not a few percent."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AsyncConfig, FLConfig
+from repro.data import (VirtualFederatedDataset, medmnist_like,
+                        partition_dirichlet)
+from repro.models.cnn import CNN, CNNConfig
+from repro.orchestrator import (BatchedAsyncOrchestrator, FaultConfig,
+                                StragglerPolicy, make_mega_fleet)
+
+WALL_BUDGET_S = 90.0
+N_CLIENTS = 10_000
+N_COMMITS = 5
+BUFFER_K = 32
+
+CFG = CNNConfig("mega-mlp", (28, 28, 1), 9, channels=(), dense=64)
+
+
+@pytest.mark.scale
+def test_10k_client_async_sim_under_wall_budget():
+    data = medmnist_like(n=600, seed=0)
+    parts = partition_dirichlet(data.y, 8, alpha=0.5, seed=0)
+    model = CNN(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    orch = BatchedAsyncOrchestrator(
+        fleet=make_mega_fleet(N_CLIENTS, seed=3),
+        fed_data=VirtualFederatedDataset(data, parts, seed=0,
+                                         n_virtual=N_CLIENTS),
+        loss_fn=model.loss_fn,
+        fl=FLConfig(mode="async", num_clients=N_CLIENTS, local_steps=2,
+                    client_lr=0.05),
+        async_cfg=AsyncConfig(buffer_size=BUFFER_K, max_concurrency=128,
+                              max_staleness=100),
+        faults=FaultConfig(dropout_prob=0.02, spot_preempt_prob=0.05,
+                           recovery_policy="discard"),
+        straggler=StragglerPolicy(contention_sigma=0.5),
+        batch_size=8, flops_per_client_round=1e12, seed=7)
+    new_params, _ = orch.run(params, N_COMMITS)
+    wall = time.perf_counter() - t0
+
+    assert wall < WALL_BUDGET_S, f"10k-client sim took {wall:.1f}s"
+    assert orch.version == N_COMMITS
+    assert orch.updates_applied == N_COMMITS * BUFFER_K
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(new_params))), \
+        "params never moved"
+    # laziness: only participants were ever materialized
+    assert len(orch.fleet.live) < N_CLIENTS // 10
+    assert len(orch.fed_data._rngs) < N_CLIENTS // 10
+    assert len(orch.fleet.live) >= len(orch.events_processed) and \
+        len(orch.events_processed) > 0
+
+
+@pytest.mark.scale
+def test_100k_fleet_construction_is_o_cohorts():
+    t0 = time.perf_counter()
+    fleet = make_mega_fleet(100_000, seed=0)
+    assert len(fleet) == 100_000
+    assert fleet.cohort_of(0) == 0 and fleet.cohort_of(99_999) == \
+        len(fleet.cohorts) - 1
+    c = fleet[54_321]
+    assert c.cid == 54_321 and len(fleet.live) == 1
+    assert time.perf_counter() - t0 < 5.0

@@ -1,0 +1,146 @@
+"""Update-pipeline algebra the batched/chunked commit paths rely on,
+checked over seeded random buffers (no optional deps — this is the
+always-on counterpart of the hypothesis fuzzers in test_properties.py,
+which import these checkers and explore the same invariants with
+generated inputs when hypothesis is installed):
+
+  * slot-permutation invariance — the commit buffer is a set;
+  * secure-agg mask cancellation for ARBITRARY participation vectors;
+  * chunked accumulation (AsyncConfig.commit_chunk) == single-shot.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_round import (AsyncConfig, build_buffer_commit_step,
+                                    build_chunked_commit_steps)
+from repro.core.pipeline import build_update_pipeline
+from repro.core.round import FLConfig
+from repro.optim import get_server_optimizer
+
+_PIPES = {}
+
+
+def pipe(secure: bool):
+    if secure not in _PIPES:
+        _PIPES[secure] = build_update_pipeline(
+            FLConfig(mode="async", secure_agg=secure))
+    return _PIPES[secure]
+
+
+def random_buffer(seed: int, K=None):
+    """One random commit buffer: deltas [K, D], weights, 0/1 participation
+    mask, integer staleness, losses."""
+    rng = np.random.default_rng(seed)
+    K = K or int(rng.integers(2, 9))
+    D = int(rng.integers(1, 13))
+    return (rng.normal(0, 3, (K, D)).astype(np.float32),
+            rng.uniform(0.1, 5, K).astype(np.float32),
+            rng.integers(0, 2, K).astype(np.float32),
+            rng.integers(0, 11, K).astype(np.float32),
+            rng.uniform(0, 5, K).astype(np.float32))
+
+
+def combine(p, d, w, m, s, l, ids=None):
+    delta, _, _ = p.combine(
+        {"x": jnp.asarray(d)}, jnp.asarray(w), jnp.asarray(m),
+        jnp.asarray(l), jax.random.PRNGKey(42),
+        ids=None if ids is None else jnp.asarray(ids, jnp.int32),
+        staleness=jnp.asarray(s), exponent=jnp.float32(0.5))
+    return np.asarray(delta["x"])
+
+
+# ------------------------------------------------------- property checkers
+def check_permutation_invariant(buf, perm_seed: int, secure: bool):
+    """Reordering slots (ids travelling with their slots, so each keeps its
+    mask identity) changes only float summation order."""
+    d, w, m, s, l = buf
+    K = d.shape[0]
+    perm = np.random.default_rng(perm_seed).permutation(K)
+    ids = np.arange(K)
+    base = combine(pipe(secure), d, w, m, s, l, ids=ids)
+    shuf = combine(pipe(secure), d[perm], w[perm], m[perm], s[perm],
+                   l[perm], ids=ids[perm])
+    np.testing.assert_allclose(shuf, base, rtol=1e-4, atol=1e-5)
+
+
+def check_masked_equals_plain(buf):
+    """Pairwise masks cancel for EVERY participation vector, so the
+    server's masked view equals the plain aggregate to f32 cancellation."""
+    d, w, m, s, l = buf
+    plain = combine(pipe(False), d, w, m, s, l)
+    masked = combine(pipe(True), d, w, m, s, l, ids=np.arange(d.shape[0]))
+    np.testing.assert_allclose(masked, plain, rtol=1e-4, atol=1e-5)
+
+
+def check_chunked_equals_single_shot(buf, C: int, secure: bool):
+    """Accumulating the buffer in C-sized chunks (fresh fold_in rng and
+    arange ids per chunk, zero-padded tail — exactly what
+    AsyncOrchestrator._commit_chunked does) and normalising once equals the
+    single-shot commit to ~1e-5."""
+    d, w, m, s, l = buf
+    K, D = d.shape
+    cfg = FLConfig(mode="async", secure_agg=secure)
+    opt = get_server_optimizer("fedavg")
+    params = {"x": jnp.zeros(D, jnp.float32)}
+    state = opt.init(params)
+    r = jax.random.PRNGKey(7)
+
+    commit = build_buffer_commit_step(opt, cfg, AsyncConfig(buffer_size=K))
+    p1, _, _ = commit(params, state, {"x": jnp.asarray(d)}, jnp.asarray(w),
+                      jnp.asarray(s), jnp.asarray(l), jnp.asarray(m),
+                      jnp.arange(K, dtype=jnp.int32), jnp.float32(0.5), r)
+
+    acc_step, fin_step = build_chunked_commit_steps(
+        opt, cfg, AsyncConfig(buffer_size=K, commit_chunk=C))
+    acc = {"x": jnp.zeros(D, jnp.float32)}
+    wsum = jnp.float32(0.0)
+    ids = jnp.arange(C, dtype=jnp.int32)
+    for k, lo in enumerate(range(0, K, C)):
+        n = min(C, K - lo)
+        pad = C - n
+
+        def pad0(v):
+            return jnp.asarray(np.concatenate(
+                [v[lo:lo + n], np.zeros(pad, np.float32)]))
+
+        dk = np.concatenate([d[lo:lo + n], np.zeros((pad, D), np.float32)])
+        acc, wsum = acc_step(acc, wsum, {"x": jnp.asarray(dk)}, pad0(w),
+                             pad0(s), pad0(l), pad0(m), ids,
+                             jnp.float32(0.5), jax.random.fold_in(r, k))
+    p2, _, _ = fin_step(params, state, acc, wsum)
+    np.testing.assert_allclose(np.asarray(p2["x"]), np.asarray(p1["x"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------ seeded-sweep tests
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("secure", [False, True])
+def test_commit_is_permutation_invariant_within_buffer(seed, secure):
+    check_permutation_invariant(random_buffer(seed), perm_seed=seed + 100,
+                                secure=secure)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_masked_equals_plain_for_arbitrary_participation(seed):
+    check_masked_equals_plain(random_buffer(seed))
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("secure", [False, True])
+def test_chunked_commit_equals_single_shot(seed, secure):
+    buf = random_buffer(seed, K=7)
+    C = [1, 2, 3, 4, 5, 7][seed]           # covers C=1, uneven tails, C=K
+    check_chunked_equals_single_shot(buf, C, secure)
+
+
+def test_all_masked_out_buffer_is_safe():
+    """participation == all zeros (a fully dead timeout commit) must not
+    divide by zero or leak uncancelled masks."""
+    d, w, m, s, l = random_buffer(3)
+    m[:] = 0.0
+    plain = combine(pipe(False), d, w, m, s, l)
+    masked = combine(pipe(True), d, w, m, s, l, ids=np.arange(d.shape[0]))
+    assert np.isfinite(plain).all() and np.isfinite(masked).all()
+    np.testing.assert_allclose(masked, plain, rtol=1e-4, atol=1e-5)

@@ -227,3 +227,47 @@ def test_async_checkpoint_restore_is_noop(K, T, dropout, preempt, policy,
     for a, b in zip(jax.tree.leaves(p_resumed), jax.tree.leaves(p_straight)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=0, atol=1e-6)
+
+
+# ------------------------------------------------------- pipeline invariants
+# hypothesis front-end over the checkers in test_pipeline_properties.py
+# (which also runs them as a seeded sweep when hypothesis is unavailable):
+# slot-permutation invariance, mask cancellation for arbitrary
+# participation vectors, and chunked == single-shot commit accumulation
+from test_pipeline_properties import (check_chunked_equals_single_shot,  # noqa: E402
+                                      check_masked_equals_plain,
+                                      check_permutation_invariant)
+
+
+@st.composite
+def _buffers(draw):
+    K = draw(st.integers(2, 8))
+    D = draw(st.integers(1, 12))
+    d = draw(hnp.arrays(np.float32, (K, D), elements=floats))
+    w = draw(hnp.arrays(np.float32, (K,),
+                        elements=st.floats(0.1, 5, width=32)))
+    m = np.asarray(draw(st.lists(st.integers(0, 1), min_size=K, max_size=K)),
+                   np.float32)
+    s = np.asarray(draw(st.lists(st.integers(0, 10), min_size=K, max_size=K)),
+                   np.float32)
+    l = draw(hnp.arrays(np.float32, (K,),
+                        elements=st.floats(0.0, 5.0, width=32)))
+    return d, w, m, s, l
+
+
+@settings(max_examples=15, deadline=None)
+@given(_buffers(), st.integers(0, 10_000), st.booleans())
+def test_commit_is_permutation_invariant_within_buffer(buf, pseed, secure):
+    check_permutation_invariant(buf, perm_seed=pseed, secure=secure)
+
+
+@settings(max_examples=15, deadline=None)
+@given(_buffers())
+def test_masked_equals_plain_for_arbitrary_participation(buf):
+    check_masked_equals_plain(buf)
+
+
+@settings(max_examples=10, deadline=None)
+@given(_buffers(), st.integers(1, 8), st.booleans())
+def test_chunked_commit_equals_single_shot(buf, C, secure):
+    check_chunked_equals_single_shot(buf, C, secure)
