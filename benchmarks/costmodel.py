@@ -231,6 +231,28 @@ def decode_active_bytes(cfg: ModelConfig, B: int) -> float:
     return act + (apb_full - act) * expert_frac
 
 
+def commit_bytes_touched(n_elems: float, n_slots: int, *,
+                         quantize_bits: int = 0, topk: bool = False,
+                         secure: bool = False, fused: bool = False) -> float:
+    """HBM bytes touched by the server-side commit (the
+    compress -> weight/discount -> (mask) -> accumulate stack) over K slot
+    deltas of n_elems float32 each.
+
+    fused (core.pipeline use_fused): every slot leaf is read once and the
+    reduced leaf written once — 4*K*n read + 4*n write — regardless of how
+    many logical stages run inside the kernel.
+
+    unfused: each enabled stage materialises a full [K, n] float32
+    intermediate (read + write = 8*K*n), then the aggregate reads the stack
+    once more and writes the sum.  Stages: weight/discount scale (always),
+    top-k, quantize, secure mask-add."""
+    K, n = n_slots, float(n_elems)
+    if fused:
+        return 4.0 * K * n + 4.0 * n
+    stages = 1 + bool(topk) + bool(quantize_bits) + bool(secure)
+    return stages * 8.0 * K * n + (4.0 * K * n + 4.0 * n)
+
+
 def roofline_terms(arch: str, shape_name: str, n_chips: int,
                    collective_bytes_per_device: float,
                    clients: int = 0, local_steps: int = 1) -> dict:
@@ -241,8 +263,23 @@ def roofline_terms(arch: str, shape_name: str, n_chips: int,
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
     dom = max(terms, key=terms.get)
+    commit = {}
+    if INPUT_SHAPES[shape_name].kind == "train":
+        cfg = get_config(arch)
+        bpe = 2 if cfg.dtype == "bfloat16" else 4
+        n_elems = c.param_bytes / bpe
+        from repro.launch.dryrun import PARALLEL_ARCHS
+        K = clients or (16 if arch in PARALLEL_ARCHS else 4)
+        unf = commit_bytes_touched(n_elems, K, quantize_bits=8, topk=True,
+                                   secure=True)
+        fus = commit_bytes_touched(n_elems, K, quantize_bits=8, topk=True,
+                                   secure=True, fused=True)
+        commit = {"commit_bytes_unfused": unf, "commit_bytes_fused": fus,
+                  "commit_fused_x": fus / unf,
+                  "commit_memory_s_unfused": unf / (n_chips * HBM_BW),
+                  "commit_memory_s_fused": fus / (n_chips * HBM_BW)}
     return {
-        **terms,
+        **terms, **commit,
         "dominant": dom.replace("_s", ""),
         "flops": c.flops,
         "hbm_bytes": c.hbm_bytes,

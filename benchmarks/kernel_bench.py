@@ -14,12 +14,20 @@ from benchmarks.common import save
 
 
 def timeit(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warmup call (compile + first dispatch), then the timed loop.
+    # jax.block_until_ready handles tuples/pytrees, so no result probing.
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(n):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / n * 1e6      # us
+
+
+def _row(name, us, nbytes):
+    row = {"name": name, "us_per_call": us, "bytes_touched": int(nbytes),
+           "derived_GBps_touched": nbytes / us / 1e3}
+    print(f"kernel,{name},{us:.0f}us,{nbytes/us/1e3:.2f}GB/s-touched")
+    return row
 
 
 def main(rounds=None):
@@ -39,10 +47,35 @@ def main(rounds=None):
          jax.jit(lambda a: ops.fedprox_update(a, a, a, lr=0.1, mu=0.01)),
          n * 16),
     ]:
-        us = timeit(lambda: fn(x))
-        rows.append({"name": name, "us_per_call": us,
-                     "derived_GBps_touched": nbytes / us / 1e3})
-        print(f"kernel,{name},{us:.0f}us,{nbytes/us/1e3:.2f}GB/s-touched")
+        rows.append(_row(name, timeit(lambda: fn(x)), nbytes))
+
+    # fused commit kernels: K slot deltas in, one accumulated block out.
+    # One HBM pass over the slot tensors (4*K*n read + 4*n write) replaces
+    # the unfused weight/topk/quantize/sum stage stack.
+    K, nf = 4, 1 << 18
+    xs = jnp.asarray(rng.normal(size=(K, nf)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 1, K).astype(np.float32))
+    s = jnp.asarray(rng.integers(0, 4, K).astype(np.float32))
+    fused_bytes = 4 * K * nf + 4 * nf
+    rows.append(_row(
+        "fused_accum",
+        timeit(jax.jit(lambda a: ops.fused_accum(a, w, s, 0.5)), xs),
+        fused_bytes))
+    rows.append(_row(
+        "fused_plain_commit",
+        timeit(jax.jit(lambda a: ops.fused_plain_commit(
+            a, w, s, 0.5, bits=8, k=26)), xs),
+        fused_bytes))
+    ids = jnp.arange(1, K + 1, dtype=jnp.uint32)
+    from repro.core import secure_agg as sec
+    seeds = sec.pair_seeds(jax.random.PRNGKey(0), ids)
+    coef = sec.pair_coef_int(ids, jnp.ones((K,), jnp.float32))
+    rows.append(_row(
+        "fused_secure_commit",
+        timeit(jax.jit(lambda a: ops.fused_secure_commit(
+            a, w, seeds, coef, 0, bits=8)), xs),
+        fused_bytes))
+
     B, L, D, N = 4, 128, 1024, 16
     a = jnp.asarray(rng.uniform(0.5, 1, (B, L, D, N)).astype(np.float32))
     b = jnp.asarray(rng.normal(size=(B, L, D, N)).astype(np.float32))
@@ -50,11 +83,7 @@ def main(rounds=None):
     for name, fn in [("selective_scan_kernel", ops.selective_scan_chunk),
                      ("selective_scan_ref", ref.selective_scan_chunk_ref)]:
         jfn = jax.jit(fn)
-        us = timeit(lambda: jfn(a, b, h0))
-        nbytes = a.nbytes * 3
-        rows.append({"name": name, "us_per_call": us,
-                     "derived_GBps_touched": nbytes / us / 1e3})
-        print(f"kernel,{name},{us:.0f}us,{nbytes/us/1e3:.2f}GB/s-touched")
+        rows.append(_row(name, timeit(lambda: jfn(a, b, h0)), a.nbytes * 3))
     save("kernel_bench", {"rows": rows,
                           "note": "interpret-mode CPU walltimes, not TPU"})
     return rows

@@ -7,6 +7,11 @@ emits the per-(arch x shape x mesh) three-term roofline table.
                     partitioned HLO with while-trip-count multipliers;
                     bytes are per-device participation volumes]
 
+Train rows also carry the server-commit HBM bytes fused vs unfused
+(costmodel.commit_bytes_touched) — the fused Pallas commit path's
+predicted bytes-touched ratio, validated empirically by
+benchmarks/table_kernel_fusion.py.
+
 Run:  PYTHONPATH=src python -m benchmarks.roofline [--artifacts artifacts/dryrun]
 """
 from __future__ import annotations
@@ -55,10 +60,12 @@ def one_liner(r: dict) -> str:
         reason = r.get("skipped", r.get("error", ""))[:60]
         return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
                 f"-- {r['status']}: {reason}")
+    commit = (f"  commit-fused {r['commit_fused_x']:.3f}x"
+              if "commit_fused_x" in r else "")
     return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
             f"compute {r['compute_s']:9.4f}s  mem {r['memory_s']:9.4f}s  "
             f"coll {r['collective_s']:9.4f}s  -> {r['dominant']:10s} "
-            f"useful {r['useful_ratio']:5.2f}")
+            f"useful {r['useful_ratio']:5.2f}{commit}")
 
 
 def what_would_help(r: dict) -> str:

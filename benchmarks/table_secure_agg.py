@@ -4,10 +4,15 @@ Pairwise additive masking (core.secure_agg) hides every individual client
 update from the server — the privacy layer of the paper's §6 — but it is
 not free:
 
-  * **bytes** — masks are dense f32 noise, so quantization/sparsity
-    savings do not survive masking: the uplink reverts to the dense wire
-    size (``masked_payload_bytes``) however aggressive the compression
-    config is.  The downlink (params broadcast) keeps its compression.
+  * **bytes** — without quantization masks are dense f32 noise, so the
+    uplink reverts to the dense wire size however aggressive the
+    compression config is (the historical ~3.9x blowup).  WITH
+    quantization the commit masks the quantized wire words in a finite
+    ring (integer-domain masking, core.pipeline), so the masked uplink is
+    ``quantize_bits + ceil(log2(cohort))`` bits per element
+    (``masked_payload_bytes``) — within ~1.25x of the plain quantized
+    payload at 8 bits.  Sparsity still does not survive masking (masked
+    words are dense), and the downlink keeps its full compression.
   * **wall-clock** — mask generation is K^2 PRF draws per commit inside
     the jit'd step, and the fatter uplink stretches the simulated
     transfer times.

@@ -34,10 +34,21 @@ class CompressionConfig:
     dropout_frac: float = 0.0     # fraction of output neurons dropped (0 = off)
     block: int = 256              # quant/top-k block length
     use_kernels: bool = False     # use Pallas kernels for the hot loops
+    use_fused: bool = True        # fuse the commit path (compress + mask +
+    #                               accumulate in one pass, kernels/fused_*);
+    #                               falls back to the unfused stages under an
+    #                               active GSPMD mesh or ineligible configs
 
     @property
     def enabled(self) -> bool:
         return bool(self.quantize_bits or self.topk_frac or self.dropout_frac)
+
+    @property
+    def topk_k(self) -> int:
+        """Entries KEPT per block under topk_frac (0 = top-k off)."""
+        if not self.topk_frac:
+            return 0
+        return max(1, int(np.ceil(self.topk_frac * self.block)))
 
 
 # ---------------------------------------------------------------------------

@@ -63,21 +63,74 @@ server therefore only ever sees masked per-slot updates whose masks
 cancel within each commit; masked-vs-plain aggregates agree to float32
 cancellation error (<= 1e-5, pinned in tests/test_secure_pipeline.py).
 
+Fused commit path (compression.use_fused, default on)
+-----------------------------------------------------
+Every stage between compress and normalise is elementwise or a slot
+reduction — pure HBM bandwidth — so the batched combinators fuse the
+whole ``compress -> weight/discount -> (mask) -> aggregate`` stack into
+single-pass Pallas kernels (kernels/fused_quant_mask, kernels/
+fused_accum): each slot leaf is read once and the reduced leaf written
+once, instead of a full [K, ...] intermediate materialized per stage.
+Which boundaries fuse:
+
+  * plain commits, deterministic quantize and/or top-k
+    -> one kernel (top-k + per-slot-block quantize + discounted sum).
+  * plain commits, no compression -> the fused accumulate kernel
+    (discount computed in-kernel from raw weights + staleness).
+  * secure commits WITH quantization -> the integer-domain kernel; see
+    below.  Secure WITHOUT quantization keeps the float-domain masks.
+  * stochastic rounding / federated dropout need per-slot randomness, so
+    those stages stay unfused (per-slot jnp or per-slot Pallas compress)
+    and only the accumulate fuses.
+  * streaming (sequential scan) and pod-local compress stages route
+    per-slot work through the Pallas compress kernels
+    (``use_kernels``) — there is no slot batch to fuse across.
+
+Pallas calls carry no GSPMD sharding rules, so fusion is gated off
+whenever a mesh is active at build time (models.sharding.get_mesh()) or
+the caller passes explicit param shardings — the unfused jnp stages
+lower under GSPMD as before.
+
+Why masking moves to the integer domain under quantization: float-domain
+pairwise masks are dense f32 noise, so a masked wire slot costs 4
+bytes/element no matter how hard the plain payload was compressed
+(the historical ~3.9x blowup in table_secure_agg.json).  Standard SecAgg
+instead masks the quantized WIRE words with modular arithmetic in a
+finite ring.  When ``secure_agg`` and ``quantize_bits`` are both set the
+commit therefore (1) quantizes every slot's weighted values onto ONE
+commit-common per-block grid (masks can only cancel if all slots share a
+grid), (2) adds uint32 modular pairwise mask words to the int32 wire
+words, and (3) sums — the masks cancel EXACTLY (integer wraparound, no
+float cancellation error) and the sum dequantizes through the common
+scale.  The wire then ships ring words of
+``quantize_bits + ceil(log2(K))`` bits (secure_agg.masked_payload_bytes)
+instead of dense f32.  This is a SCHEME property, engaged whether or not
+the Pallas kernel runs: ``use_fused`` only picks the executor (kernel vs
+the bit-identical jnp oracle in kernels/ref.py), so fused and unfused
+paths agree and kill/resume replay is executor-independent.  The
+streaming (sequential) and cross-pod secure paths keep float-domain
+masks: a scan sees one slot at a time and pods quantize on per-pod
+grids, so neither can share a commit-common grid.
+
 Build-time rejections: ``secure_agg`` + ``trimmed_mean`` (coordinate
 -wise trimming needs individual updates, which masking is designed to
 hide).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import secure_agg as sec
 from repro.core.compression import compress_tree
 from repro.core.secure_agg import MASK_DOMAIN_TAG
+from repro.kernels import ops as kops
+from repro.models import sharding as sh
 
 if TYPE_CHECKING:                       # avoid circular import with round.py
     from repro.core.round import FLConfig
@@ -99,12 +152,30 @@ class UpdatePipeline:
     jit-compatible, so one instance serves vmapped, scanned and batched
     callers alike."""
 
-    def __init__(self, cfg: "FLConfig", n_pods: int = 1):
+    def __init__(self, cfg: "FLConfig", n_pods: int = 1,
+                 allow_fused: bool = True):
         if cfg.secure_agg and cfg.aggregation == "trimmed_mean":
             raise ValueError(
                 "secure_agg is incompatible with aggregation='trimmed_mean': "
                 "coordinate-wise trimming needs the individual updates that "
                 "pairwise masking hides; use fedavg/weighted")
+        comp = cfg.compression
+        # Pallas fusion is an intra-device optimisation: pallas_call has no
+        # GSPMD sharding rules, so an active mesh at build time (or a caller
+        # that passed explicit param shardings -> allow_fused=False) keeps
+        # the unfused jnp stages, which lower under GSPMD as before.
+        self.fused = (bool(getattr(comp, "use_fused", True))
+                      and allow_fused and sh.get_mesh() is None)
+        # fully-fusable compression: deterministic rounding, no per-slot
+        # dropout randomness
+        self._fusable_comp = (not comp.dropout_frac
+                              and not (comp.quantize_bits
+                                       and comp.stochastic_rounding))
+        if self.fused and comp.enabled and not comp.use_kernels:
+            # per-slot compress stages (sequential scan, pod-local compress)
+            # route through the Pallas compress kernels under fusion
+            cfg = dataclasses.replace(
+                cfg, compression=dataclasses.replace(comp, use_kernels=True))
         self.cfg = cfg
         self.n_pods = n_pods
 
@@ -199,19 +270,81 @@ class UpdatePipeline:
                 "coordinate-wise trimming needs all slots at once")
         w_eff, w_raw = self.client_weights(weights, mask, losses,
                                            staleness, exponent)
-        stacked = self.compress_each(deltas, rng)
+        comp = self.cfg.compression
         if self.cfg.secure_agg:
             if ids is None:
                 ids = jnp.arange(mask.shape[0], dtype=jnp.int32)
-            pre = jax.tree.map(
-                lambda d: d.astype(jnp.float32) * w_eff.reshape(
-                    (-1,) + (1,) * (d.ndim - 1)), stacked)
-            masked = self.secure_mask(pre, self.mask_key(rng), ids, mask)
-            summed = jax.tree.map(lambda m: m.astype(jnp.float32).sum(0),
-                                  masked)
+            if comp.quantize_bits:
+                summed = self._fused_secure(deltas, w_eff, mask, rng, ids)
+            else:
+                stacked = self.compress_each(deltas, rng) \
+                    if comp.enabled else deltas
+                pre = jax.tree.map(
+                    lambda d: d.astype(jnp.float32) * w_eff.reshape(
+                        (-1,) + (1,) * (d.ndim - 1)), stacked)
+                masked = self.secure_mask(pre, self.mask_key(rng), ids, mask)
+                summed = jax.tree.map(lambda m: m.astype(jnp.float32).sum(0),
+                                      masked)
+        elif self.fused:
+            s = (staleness.astype(jnp.float32) if staleness is not None
+                 else jnp.zeros_like(w_raw))
+            a = exponent if exponent is not None else 0.0
+            if comp.enabled and self._fusable_comp:
+                # one-pass: top-k + quantize + discount + sum per leaf
+                summed = jax.tree.map(
+                    lambda d: kops.fused_plain_commit(
+                        d, w_raw, s, a, bits=comp.quantize_bits,
+                        k=comp.topk_k, block=comp.block), deltas)
+            else:
+                # per-slot stages that need slot randomness stay unfused;
+                # the accumulate still fuses
+                stacked = (self.compress_each(deltas, rng)
+                           if comp.enabled else deltas)
+                summed = jax.tree.map(
+                    lambda d: kops.fused_accum(d, w_raw, s, a,
+                                               block=comp.block), stacked)
         else:
+            stacked = self.compress_each(deltas, rng) \
+                if comp.enabled else deltas
             summed = self.weighted_sum(stacked, w_eff)
         return summed, w_eff, w_raw
+
+    def _fused_secure(self, deltas, w_eff, participation, rng, ids):
+        """Integer-domain SecAgg commit (secure_agg + quantize_bits):
+        weighted slot values quantize onto a commit-common per-block grid,
+        int32 wire words pick up uint32 modular pairwise masks, masks
+        cancel EXACTLY in the sum.  The scheme runs whether or not fusion
+        is active — ``self.fused`` only picks the Pallas kernel over the
+        bit-identical jnp oracle — so wire accounting, checkpoint replay
+        and fused-vs-unfused parity are executor-independent."""
+        comp = self.cfg.compression
+        key = self.mask_key(rng)
+        seeds = sec.pair_seeds(key, ids)
+        coef = sec.pair_coef_int(ids, participation)
+        stacked, k_in = deltas, comp.topk_k
+        if comp.dropout_frac:
+            # dropout draws per-slot randomness and must precede top-k, so
+            # both run as per-slot pre-stages (quantize stays in the
+            # integer-domain masked commit)
+            pre = dataclasses.replace(comp, quantize_bits=0)
+            rngs = jax.random.split(rng, ids.shape[0])
+            stacked = jax.vmap(
+                lambda t, r: compress_tree(t, pre, r))(stacked, rngs)
+            k_in = 0
+        leaves, treedef = jax.tree.flatten(stacked)
+        out, base = [], 0
+        for i, leaf in enumerate(leaves):
+            nr = (jax.random.fold_in(rng, i)
+                  if comp.stochastic_rounding else None)
+            out.append(kops.fused_secure_commit(
+                leaf, w_eff, seeds, coef, base, bits=comp.quantize_bits,
+                k=k_in, block=comp.block, use_pallas=self.fused,
+                noise_rng=nr))
+            # advance the mask stream by this leaf's padded blocked size
+            lead = leaf.shape[1:] or (1,)
+            nb = -(-lead[-1] // comp.block)
+            base += int(np.prod(lead[:-1], dtype=np.int64)) * nb * comp.block
+        return jax.tree.unflatten(treedef, out)
 
     def combine(self, deltas, weights, mask, losses, rng, ids=None,
                 staleness=None, exponent=None):
@@ -268,14 +401,33 @@ class UpdatePipeline:
         P = jax.tree.leaves(pod_sums)[0].shape[0]
         sums = pod_sums if compressed else self.compress_each(pod_sums, rng)
         if self.cfg.secure_agg:
+            # cross-pod masking stays float-domain even under quantization:
+            # pod partial sums were quantized on per-pod grids, so there is
+            # no common grid for integer masks to cancel on (and P is tiny
+            # — the dense-mask bytes here are not the wire bottleneck)
             ones = jnp.ones((P,), jnp.float32)
             sums = self.secure_mask(sums, self.mask_key(rng),
                                     jnp.arange(P, dtype=jnp.int32), ones)
-        summed = jax.tree.map(lambda s: s.astype(jnp.float32).sum(0), sums)
+            summed = jax.tree.map(lambda s: s.astype(jnp.float32).sum(0),
+                                  sums)
+        elif self.fused:
+            ones = jnp.ones((P,), jnp.float32)
+            zeros = jnp.zeros((P,), jnp.float32)
+            summed = jax.tree.map(
+                lambda s: kops.fused_accum(s, ones, zeros, 0.0,
+                                           block=self.cfg.compression.block),
+                sums)
+        else:
+            summed = jax.tree.map(lambda s: s.astype(jnp.float32).sum(0),
+                                  sums)
         return self.normalise(summed, w_total)
 
 
-def build_update_pipeline(cfg: "FLConfig", n_pods: int = 1) -> UpdatePipeline:
+def build_update_pipeline(cfg: "FLConfig", n_pods: int = 1,
+                          allow_fused: bool = True) -> UpdatePipeline:
     """Build the stage stack once from FLConfig; all execution modes of
-    round.py and async_round.py close over the returned pipeline."""
-    return UpdatePipeline(cfg, n_pods=n_pods)
+    round.py and async_round.py close over the returned pipeline.
+    ``allow_fused=False`` forces the unfused stages (used when the round
+    step is built with explicit param shardings — Pallas fusion has no
+    GSPMD story; an active mesh disables it automatically)."""
+    return UpdatePipeline(cfg, n_pods=n_pods, allow_fused=allow_fused)

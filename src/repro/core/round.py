@@ -152,7 +152,11 @@ def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
     ~600 MB cross-pod all-gathers of the per-pod weight copies per layer per
     step (EXPERIMENTS.md §Perf iteration 4)."""
     local_train = build_local_train(loss_fn, client_opt, cfg, param_shardings)
-    pipe = build_update_pipeline(cfg, n_pods=n_pods)
+    # explicit shardings mean the step lowers under GSPMD: keep the unfused
+    # jnp stages (Pallas fusion has no sharding rules); an active mesh at
+    # build time disables fusion inside the pipeline regardless
+    pipe = build_update_pipeline(cfg, n_pods=n_pods,
+                                 allow_fused=param_shardings is None)
     C = cfg.num_clients
 
     # All three modes consume the SAME stage stack (core.pipeline): they

@@ -65,6 +65,36 @@ def pair_mask(key, id_i, id_j, shape):
     return jax.random.normal(k, shape, jnp.float32)
 
 
+def pair_seeds(key, ids):
+    """Symmetric [K, K] uint32 pair seeds PRF(key, lo, hi) for the
+    integer-domain masking kernel (kernels/fused_quant_mask): both slots
+    of a pair derive the SAME seed (min/max id ordering), so both draw
+    identical mask words and the signed combination cancels exactly under
+    uint32 wraparound.  Same (key, lo, hi) keying as the float-domain
+    ``pair_mask`` — only the PRF output domain differs (one uint32 seed
+    that the kernel's avalanche hash streams over element indices, rather
+    than a normal draw per element)."""
+    lo = jnp.minimum(ids[:, None], ids[None, :]).reshape(-1)
+    hi = jnp.maximum(ids[:, None], ids[None, :]).reshape(-1)
+    flat = jax.vmap(lambda l, h: jax.random.bits(
+        jax.random.fold_in(jax.random.fold_in(key, l), h),
+        dtype=jnp.uint32))(lo, hi)
+    K = ids.shape[0]
+    return flat.reshape(K, K)
+
+
+def pair_coef_int(ids, participation):
+    """Integer {-1, 0, +1} variant of ``_pair_coef`` for the quantized
+    masking domain: sgn(id_j - id_i) * [p_i > 0] * [p_j > 0] as int32,
+    applied to mask words as exact two's-complement multiplies.  The sign
+    comes from comparisons, not subtraction — unsigned id dtypes would
+    wrap the difference and break the antisymmetry masks cancel by."""
+    sign = ((ids[None, :] > ids[:, None]).astype(jnp.int32)
+            - (ids[None, :] < ids[:, None]).astype(jnp.int32))
+    p = (participation > 0).astype(jnp.int32)
+    return sign * p[None, :] * p[:, None]
+
+
 def _pair_coef(ids, participation):
     """[K, K] signed pair coefficients sgn(id_j - id_i) * p_i * p_j.
 
@@ -159,10 +189,27 @@ def secure_weighted_mean(updates, weights, participation, key, ids=None):
     return jax.tree.map(lambda t: t / denom, total)
 
 
-def masked_payload_bytes(tree) -> int:
-    """Wire bytes of one MASKED update.  Additive masks are dense f32
-    noise, so quantization/sparsity savings do not survive masking (the
-    real protocol works in a finite ring for the same reason): every
-    leaf costs 4 bytes/element on the wire, whatever the compression
-    config says the plain path would have paid."""
-    return int(sum(np.prod(l.shape) * 4 for l in jax.tree.leaves(tree)))
+def masked_payload_bytes(tree, cfg=None, n_slots: int = 2) -> int:
+    """Wire bytes of one MASKED update slot.
+
+    Without quantization, additive masks are dense f32 noise, so every
+    leaf costs 4 bytes/element whatever the compression config says the
+    plain path would have paid.  WITH quantization (``cfg.quantize_bits``)
+    masking moves into the quantized integer domain
+    (kernels/fused_quant_mask): each element ships as one finite-ring word
+    of ``quantize_bits + ceil(log2(n_slots))`` bits — the headroom keeps
+    the sum of ``n_slots`` bounded words faithful before wraparound — plus
+    one f32 scale per block, which collapses the historical ~3.9x masked
+    blowup (table_secure_agg.json) to roughly the quantized wire size.
+    Sparsity still does not survive masking either way: masked words are
+    uniformly dense."""
+    bits = int(getattr(cfg, "quantize_bits", 0) or 0) if cfg is not None else 0
+    if not bits:
+        return int(sum(np.prod(l.shape) * 4 for l in jax.tree.leaves(tree)))
+    ring_bits = bits + max(1, int(np.ceil(np.log2(max(n_slots, 2)))))
+    block = int(getattr(cfg, "block", 256))
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(np.prod(leaf.shape))
+        total += int(n * ring_bits / 8 + np.ceil(n / block) * 4)
+    return total

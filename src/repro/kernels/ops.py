@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fedprox_update as _fp
+from repro.kernels import fused_accum as _fa
+from repro.kernels import fused_quant_mask as _fqm
 from repro.kernels import quantize as _q
 from repro.kernels import ref as _ref
 from repro.kernels import selective_scan as _ss
@@ -26,24 +28,20 @@ def _interpret() -> bool:
 
 def _as_blocks(x, block):
     """Blocks along the LAST dim (matches core.compression's shard-local
-    grouping), then collapse leading dims to rows for the kernel grid."""
+    grouping), then collapse leading dims to rows for the kernel grid.
+    Row padding to the kernels' tile multiple happens INSIDE the block
+    wrappers (quantize/topk), so any leaf size routes to the kernels."""
     L = x.shape[-1] if x.ndim else 1
     xx = x.reshape(x.shape or (1,)).astype(jnp.float32)
     pad = (-L) % block
     if pad:
         xx = jnp.pad(xx, [(0, 0)] * (xx.ndim - 1) + [(0, pad)])
     rows_shape = xx.shape[:-1] + ((L + pad) // block,)
-    b = xx.reshape(-1, block)
-    rows_pad = (-b.shape[0]) % _q.ROWS_TILE
-    if rows_pad:
-        b = jnp.concatenate([b, jnp.zeros((rows_pad, block), b.dtype)])
-    return b, (pad, rows_pad, rows_shape)
+    return xx.reshape(-1, block), (pad, rows_shape)
 
 
 def _from_blocks(b, meta, shape, dtype):
-    pad, rows_pad, rows_shape = meta
-    if rows_pad:
-        b = b[:-rows_pad]
+    pad, rows_shape = meta
     y = b.reshape(*rows_shape, -1).reshape(*rows_shape[:-1], -1)
     if pad:
         y = y[..., :-pad]
@@ -80,6 +78,89 @@ def fedprox_update(w, g, w0, *, lr: float, mu: float = 0.0):
     if pad:
         y = y[:-pad]
     return y.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused commit path (kernels/fused_accum, kernels/fused_quant_mask): the
+# per-update hot loop — compress + mask + accumulate in one pass over a
+# slot-stacked [K, ...] leaf.  core/pipeline.py dispatches here.
+# ---------------------------------------------------------------------------
+
+def _stack_blocks(x, block):
+    """[K, ...] slot-stacked leaf -> ([K, R, block] f32, meta).  Blocks
+    along the leaf's LAST dim per slot — identical block membership to
+    core.compression._to_blocks, so per-block scales agree with the
+    unfused stages — with leading dims collapsed into rows."""
+    K = x.shape[0]
+    lead = x.shape[1:]
+    xx = x.reshape((K,) + (lead or (1,))).astype(jnp.float32)
+    L = xx.shape[-1]
+    pad = (-L) % block
+    if pad:
+        xx = jnp.pad(xx, [(0, 0)] * (xx.ndim - 1) + [(0, pad)])
+    return xx.reshape(K, -1, block), (pad, xx.shape[1:], lead)
+
+
+def _unstack_sum(y, meta, dtype):
+    """[R, block] summed blocks -> the un-padded summed leaf."""
+    pad, padded_shape, lead = meta
+    y = y.reshape(*padded_shape[:-1], -1)
+    if pad:
+        y = y[..., :-pad]
+    return y.reshape(lead or ()).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_accum(x, w, staleness, exponent, *, block: int = 256):
+    """``sum_i w_i * (1+s_i)^(-exponent) * x_i`` over the slot dim of one
+    leaf in a single pass (kernels/fused_accum)."""
+    xb, meta = _stack_blocks(x, block)
+    K = xb.shape[0]
+    wv = w.astype(jnp.float32).reshape(K, 1)
+    sv = staleness.astype(jnp.float32).reshape(K, 1)
+    av = jnp.asarray(exponent, jnp.float32).reshape(1, 1)
+    y = _fa.fused_accum_blocks(xb, wv, sv, av, _interpret())
+    return _unstack_sum(y, meta, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k", "block"))
+def fused_plain_commit(x, w, staleness, exponent, *, bits: int, k: int,
+                       block: int = 256):
+    """Per-slot top-k + deterministic quantize + discounted weighted sum
+    over the slot dim of one leaf, one pass (kernels/fused_quant_mask)."""
+    xb, meta = _stack_blocks(x, block)
+    K = xb.shape[0]
+    wv = w.astype(jnp.float32).reshape(K, 1)
+    sv = staleness.astype(jnp.float32).reshape(K, 1)
+    av = jnp.asarray(exponent, jnp.float32).reshape(1, 1)
+    y = _fqm.plain_commit_blocks(xb, wv, sv, av, bits=bits, k=k,
+                                 interpret=_interpret())
+    return _unstack_sum(y, meta, jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "k", "block", "use_pallas"))
+def fused_secure_commit(x, w_eff, seeds, coef, base, *, bits: int, k: int = 0,
+                        block: int = 256, use_pallas: bool = True,
+                        noise_rng=None):
+    """Integer-domain secure aggregation of one slot-stacked leaf: top-k,
+    commit-common-scale integer quantize, uint32 modular pairwise masks,
+    sum, dequantize.  ``use_pallas=False`` (or a ``noise_rng`` for
+    stochastic rounding) routes to the bit-identical jnp oracle — the
+    SCHEME is the same either way; only the executor differs."""
+    xb, meta = _stack_blocks(x, block)
+    K = xb.shape[0]
+    wv = w_eff.astype(jnp.float32).reshape(K, 1)
+    if use_pallas and noise_rng is None:
+        bv = jnp.asarray(base, jnp.uint32).reshape(1, 1)
+        y = _fqm.secure_commit_blocks(xb, wv, seeds, coef, bv, bits=bits,
+                                      k=k, interpret=_interpret())
+    else:
+        noise = (jax.random.uniform(noise_rng, xb.shape)
+                 if noise_rng is not None else None)
+        y = _ref.fused_secure_commit_ref(xb, wv, seeds, coef, base, bits,
+                                         k=k, noise=noise)
+    return _unstack_sum(y, meta, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -30,15 +30,23 @@ def _kernel(x_ref, o_ref, *, bits: int):
 
 
 def quantize_dequant_blocks(xb, bits: int, interpret: bool):
-    """xb: [R, block] float; returns same shape/dtype."""
+    """xb: [R, block] float; returns same shape/dtype.
+
+    Arbitrary R: the row dim is padded here to a tile multiple (zero rows
+    quantize to zero — scale falls back to 1.0 — so the pad is inert) and
+    sliced back off, so odd leaf sizes route to the kernel instead of
+    tripping a shape assert."""
     R, block = xb.shape
     rows = min(ROWS_TILE, R)
-    assert R % rows == 0
-    return pl.pallas_call(
+    rows_pad = (-R) % rows
+    if rows_pad:
+        xb = jnp.concatenate([xb, jnp.zeros((rows_pad, block), xb.dtype)])
+    y = pl.pallas_call(
         functools.partial(_kernel, bits=bits),
-        grid=(R // rows,),
+        grid=((R + rows_pad) // rows,),
         in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, block), xb.dtype),
+        out_shape=jax.ShapeDtypeStruct((R + rows_pad, block), xb.dtype),
         interpret=interpret,
     )(xb)
+    return y[:R] if rows_pad else y

@@ -51,6 +51,74 @@ def fedprox_update_ref(w, g, w0, lr: float, mu: float):
             mu * (w.astype(jnp.float32) - w0.astype(jnp.float32)))).astype(w.dtype)
 
 
+def fused_accum_ref(xb, w, s, alpha):
+    """Oracle for kernels/fused_accum over a blocked [K, R, block] stack:
+    ``sum_i w_i * (1 + s_i)^(-alpha) * x_i``.  w, s are [K, 1]."""
+    w_eff = (w.astype(jnp.float32)
+             * (1.0 + s.astype(jnp.float32)) ** (-alpha))
+    return (xb.astype(jnp.float32) * w_eff[:, :, None]).sum(0)
+
+
+def _topk_block_sort(x, k: int):
+    """Ground-truth per-block top-k (sort threshold, ties kept) over the
+    last dim — the same semantics core.compression.topk_sparsify uses."""
+    mag = jnp.abs(x)
+    thresh = -jnp.sort(-mag, axis=-1)[..., k - 1:k]
+    return jnp.where(mag >= thresh, x, 0.0)
+
+
+def fused_plain_commit_ref(xb, w, s, alpha, bits: int, k: int = 0):
+    """Oracle for fused_quant_mask._plain_kernel over the blocked
+    [K, R, block] stack: per-slot top-k -> per-slot per-block symmetric
+    quantize -> staleness-discounted weighted sum over slots."""
+    x = xb.astype(jnp.float32)
+    if k:
+        x = _topk_block_sort(x, k)
+    if bits:
+        qmax = 2.0 ** (bits - 1) - 1
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+        scale = jnp.where(scale == 0, 1.0, scale)
+        x = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
+    return fused_accum_ref(x, w, s, alpha)
+
+
+def fused_secure_commit_ref(xb, w_eff, seeds, coef, base, bits: int,
+                            k: int = 0, noise=None):
+    """Oracle for fused_quant_mask._secure_kernel: integer-domain SecAgg
+    over a blocked [K, R, block] stack.  Weighted slot values quantize onto
+    ONE commit-common per-block grid, the int32 wire words pick up uint32
+    modular pairwise masks (exact cancellation in the sum), and the summed
+    word dequantizes back through the common scale.
+
+    ``noise`` ([K, R, block] uniform[0,1)) switches round() to stochastic
+    rounding ``floor(y/S + u)`` — the jnp fallback the pipeline uses when
+    ``stochastic_rounding`` is on (the Pallas kernel is deterministic).
+    Masks are additive integers either way, so cancellation is unaffected.
+    """
+    from repro.kernels import fused_quant_mask as fqm
+
+    x = xb.astype(jnp.float32)
+    K, R, block = x.shape
+    if k:
+        x = _topk_block_sort(x, k)
+    y = x * w_eff.astype(jnp.float32)[:, :, None]
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(y), axis=(0, 2), keepdims=True) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    yq = y / scale
+    q = jnp.floor(yq + noise) if noise is not None else jnp.round(yq)
+    q = jnp.clip(q, -qmax - 1, qmax).astype(jnp.int32)
+    qu = jax.lax.bitcast_convert_type(q, jnp.uint32)
+    idx = (jnp.asarray(base, jnp.uint32)
+           + jnp.arange(R * block, dtype=jnp.uint32).reshape(R, block))
+    total = jnp.zeros((R, block), jnp.uint32)
+    for i in range(K):
+        total = total + (qu[i]
+                         + fqm.mask_total_u32(seeds[i], coef[i], idx))
+    summed = jax.lax.bitcast_convert_type(total, jnp.int32).astype(jnp.float32)
+    return summed * scale[0]
+
+
 def selective_scan_chunk_ref(a, b, h0):
     """h_t = a_t h_{t-1} + b_t over the chunk dim (axis=1)."""
     def combine(c1, c2):

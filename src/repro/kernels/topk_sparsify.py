@@ -44,14 +44,20 @@ def _kernel(x_ref, o_ref, *, k: int):
 
 
 def topk_sparsify_blocks(xb, k: int, interpret: bool):
+    """Arbitrary R: rows are padded to a tile multiple (all-zero rows keep a
+    threshold of 0 and stay zero) and sliced back, so odd leaf sizes route
+    to the kernel instead of tripping a shape assert."""
     R, block = xb.shape
     rows = min(ROWS_TILE, R)
-    assert R % rows == 0
-    return pl.pallas_call(
+    rows_pad = (-R) % rows
+    if rows_pad:
+        xb = jnp.concatenate([xb, jnp.zeros((rows_pad, block), xb.dtype)])
+    y = pl.pallas_call(
         functools.partial(_kernel, k=k),
-        grid=(R // rows,),
+        grid=((R + rows_pad) // rows,),
         in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, block), xb.dtype),
+        out_shape=jax.ShapeDtypeStruct((R + rows_pad, block), xb.dtype),
         interpret=interpret,
     )(xb)
+    return y[:R] if rows_pad else y

@@ -158,6 +158,16 @@ def main():
     ap.add_argument("--quantize-bits", type=int, default=0)
     ap.add_argument("--topk-frac", type=float, default=0.0)
     ap.add_argument("--fed-dropout", type=float, default=0.0)
+    ap.add_argument("--use-fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="fused Pallas commit path (compress+mask+accumulate "
+                         "in one pass; interpret mode on CPU). --no-use-fused "
+                         "forces the unfused jnp stages")
+    ap.add_argument("--stochastic-rounding",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="stochastic rounding for quantization "
+                         "(--no-stochastic-rounding selects deterministic "
+                         "round-to-nearest, the fully-fusable mode)")
     ap.add_argument("--fastest-k", type=int, default=0)
     ap.add_argument("--deadline-s", type=float, default=0.0)
     ap.add_argument("--dropout-prob", type=float, default=0.0)
@@ -227,7 +237,9 @@ def main():
         secure_agg=args.secure_agg,
         compression=CompressionConfig(quantize_bits=args.quantize_bits,
                                       topk_frac=args.topk_frac,
-                                      dropout_frac=args.fed_dropout))
+                                      dropout_frac=args.fed_dropout,
+                                      stochastic_rounding=args.stochastic_rounding,
+                                      use_fused=args.use_fused))
     fleet = make_hybrid_fleet(n_hpc, n_cloud, seed=args.seed,
                               data_sizes=[fed.client_size(c)
                                           for c in range(fed.num_clients)])

@@ -182,14 +182,17 @@ class AsyncOrchestrator:
         """(down_bytes, up_bytes) one dispatch/arrival costs on the wire.
 
         Downlink is the (compressed) params broadcast.  Uplink is the
-        client's update: under secure_agg the additive masks make it dense
-        f32 — compression savings do not survive masking — so the masked
-        wire size is what both the comm ledger and the simulated transfer
-        time are charged."""
+        client's update: under secure_agg the masked wire size is what both
+        the comm ledger and the simulated transfer time are charged.
+        Without quantization the additive masks are dense f32; WITH
+        quantization masking happens in the quantized integer domain
+        (core.pipeline), so the slot ships finite-ring words of
+        quantize_bits + ceil(log2(buffer_size)) bits instead."""
         if not hasattr(self, "_pb"):
             down = payload_bytes(params, self.fl.compression)
-            up = (masked_payload_bytes(params) if self.fl.secure_agg
-                  else down)
+            up = (masked_payload_bytes(params, self.fl.compression,
+                                       n_slots=self.async_cfg.buffer_size)
+                  if self.fl.secure_agg else down)
             self._pb = (down, up)
         return self._pb
 

@@ -162,12 +162,14 @@ class Orchestrator:
 
     def _payload_bytes_cache(self, params):
         """(down_bytes, up_bytes): under secure_agg the uplink is the
-        MASKED update — dense f32, compression savings don't survive the
-        additive masks — while the params downlink stays plain."""
+        MASKED update — dense f32 without quantization, finite-ring words
+        of quantize_bits + ceil(log2(cohort)) bits with it (integer-domain
+        masking, core.pipeline) — while the params downlink stays plain."""
         if not hasattr(self, "_pb"):
             down = payload_bytes(params, self.fl.compression)
-            up = (masked_payload_bytes(params) if self.fl.secure_agg
-                  else down)
+            up = (masked_payload_bytes(params, self.fl.compression,
+                                       n_slots=self.fl.num_clients)
+                  if self.fl.secure_agg else down)
             self._pb = (down, up)
         return self._pb
 

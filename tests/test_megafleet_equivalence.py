@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import AsyncCheckpointManager
-from repro.core import AsyncConfig, FLConfig
+from repro.core import AsyncConfig, CompressionConfig, FLConfig
 from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
 from repro.exec import make_backend
 from repro.models.cnn import CNN, CNNConfig
@@ -51,7 +51,8 @@ def sched_backend():
 
 def make_orch(engine, secure=False, scheduler=False, buffer_size=4,
               commit_timeout=0.0, staleness_exponent=0.5, faults=None,
-              train_chunk=3, checkpoint_mgr=None, checkpoint_every=0):
+              train_chunk=3, checkpoint_mgr=None, checkpoint_every=0,
+              compression=None, commit_chunk=0):
     fleet = make_hybrid_fleet(4, 4, seed=3,
                               data_sizes=[len(p) for p in PARTS])
     fed = FederatedDataset(DATA, PARTS, seed=0)
@@ -61,10 +62,12 @@ def make_orch(engine, secure=False, scheduler=False, buffer_size=4,
     orch = cls(
         fleet=fleet, fed_data=fed, loss_fn=MODEL.loss_fn,
         fl=FLConfig(mode="async", num_clients=8, local_steps=2,
-                    client_lr=0.05, secure_agg=secure),
+                    client_lr=0.05, secure_agg=secure,
+                    compression=compression or CompressionConfig()),
         async_cfg=AsyncConfig(buffer_size=buffer_size, max_concurrency=6,
                               max_staleness=50,
                               commit_timeout_s=commit_timeout,
+                              commit_chunk=commit_chunk,
                               staleness_exponent=staleness_exponent),
         faults=faults or FaultConfig(),
         straggler=StragglerPolicy(contention_sigma=0.5),
@@ -72,7 +75,8 @@ def make_orch(engine, secure=False, scheduler=False, buffer_size=4,
         batch_size=4, flops_per_client_round=2e12, seed=7,
         checkpoint_mgr=checkpoint_mgr, checkpoint_every=checkpoint_every,
         **kw)
-    key = (secure, buffer_size, str(staleness_exponent))
+    key = (secure, buffer_size, str(staleness_exponent), commit_chunk,
+           str(compression))
     if key in _STEP_CACHE:
         orch._client_update, orch._commit_step = _STEP_CACHE[key]
     else:
@@ -157,6 +161,47 @@ def test_train_chunk_padding_bit_identical(chunk):
     # chunk=1: every job its own (padded-to-1) bucket; chunk=2: odd buckets
     # pad a lane; chunk=64 >> in-flight: one big padded bucket per snapshot
     run_pair(train_chunk=chunk, n_commits=4)
+
+
+# ----------------------------------------------------- fused commit axis
+_FUSED_COMP = CompressionConfig(quantize_bits=8, topk_frac=0.1,
+                                stochastic_rounding=False)
+
+
+def test_fused_commit_bit_identical():
+    """The fused Pallas commit path (use_fused default on + deterministic
+    quantize/top-k) keeps the engines bit-identical."""
+    run_pair(compression=_FUSED_COMP)
+
+
+def test_fused_secure_chunked_commit_bit_identical():
+    """Integer-domain masked commits, accumulated in chunks, still replay
+    identically across engines — the fused kernel is deterministic and the
+    chunk algebra is additive."""
+    run_pair(secure=True, commit_chunk=2,
+             compression=CompressionConfig(quantize_bits=8,
+                                           stochastic_rounding=False))
+
+
+def test_kill_resume_fused_secure_chunked():
+    """ISSUE 7 acceptance: chunked-commit + kill/resume bit-identity with
+    use_fused on — the integer-domain mask stream and the fused kernels
+    replay exactly from a checkpoint, across engines."""
+    kw = dict(secure=True, commit_chunk=2,
+              compression=CompressionConfig(quantize_bits=8,
+                                            stochastic_rounding=False))
+    o_full = make_orch("legacy", **kw)
+    p_full, _ = o_full.run(PARAMS, 6)
+    with tempfile.TemporaryDirectory() as td:
+        o_half = make_orch("legacy", checkpoint_mgr=AsyncCheckpointManager(td),
+                           checkpoint_every=3, **kw)
+        o_half.run(PARAMS, 3)
+        o_rest = make_orch("batched", **kw)
+        o_rest.checkpoint_mgr = AsyncCheckpointManager(td)
+        p_r, s_r = o_rest.checkpoint_mgr.restore_async(o_rest, PARAMS)
+        assert o_rest.version == 3
+        p2, _ = o_rest.run(p_r, 6, server_state=s_r)
+    assert_same_trajectory(o_full, p_full, o_rest, p2)
 
 
 @pytest.mark.parametrize("first,second", [("legacy", "batched"),

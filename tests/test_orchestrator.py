@@ -84,6 +84,58 @@ def test_simulated_times_reflect_profiles():
     assert t[0] < t[3]
 
 
+def _scalar_adaptive_select(sel, fleet, k, rnd):
+    """The retired per-client scoring loop, kept verbatim as the oracle for
+    the vectorised AdaptiveSelection.select (must stay bitwise identical)."""
+    cands = list(fleet)
+    timed = [c for c in cands if c.ema_round_time > 0]
+    if len(timed) > 4 and sel.exclude_frac:
+        cutoff = np.quantile([c.ema_round_time for c in timed],
+                             1.0 - sel.exclude_frac)
+        slow = {c.cid for c in timed if c.ema_round_time > cutoff}
+        kept = [c for c in cands if c.cid not in slow]
+        if len(kept) >= k:
+            cands = kept
+    scores = []
+    for c in cands:
+        s = (max(c.profile.compute_tflops, 1e-3) ** sel.a
+             * max(c.profile.bandwidth_gbps, 1e-3) ** sel.b
+             * max(c.success_rate, 0.05) ** sel.c)
+        age = rnd - c.last_selected_round
+        s *= 1.0 + sel.aging_boost * np.log1p(max(age, 0))
+        scores.append(s)
+    scores = np.asarray(scores, np.float64)
+    p = np.exp(np.log(scores + 1e-12) / sel.temp)
+    p /= p.sum()
+    pick = sel.rng.choice([c.cid for c in cands], min(k, len(cands)),
+                          replace=False, p=p)
+    return list(pick)
+
+
+def test_adaptive_vectorised_matches_scalar_trajectory():
+    # the vectorised scoring pass must reproduce the scalar loop's
+    # probability vector bit-for-bit, so with a shared rng state the whole
+    # multi-round selection trajectory is identical
+    fleet = make_hybrid_fleet(12, 12, seed=7)
+    rng = np.random.default_rng(9)
+    for c in fleet:                   # mixed history: some timed, some not
+        if rng.random() < 0.6:
+            c.record(bool(rng.random() < 0.8), float(rng.uniform(0.5, 30)),
+                     int(rng.integers(0, 5)))
+    vec = AdaptiveSelection(seed=11, exclude_frac=0.2, softmax_temp=0.7)
+    ref = AdaptiveSelection(seed=11, exclude_frac=0.2, softmax_temp=0.7)
+    for rnd in range(25):
+        got = vec.select(fleet, 6, rnd)
+        want = _scalar_adaptive_select(ref, fleet, 6, rnd)
+        assert got == want, (rnd, got, want)
+        for cid in got:               # evolve history like a real run
+            fleet[cid].record(True, float(1.0 + cid % 5), rnd)
+    # also pin the small-fleet branch (no quantile exclusion, k > len)
+    tiny = make_hybrid_fleet(2, 1, seed=3)
+    assert (AdaptiveSelection(seed=2).select(tiny, 8, 0)
+            == _scalar_adaptive_select(AdaptiveSelection(seed=2), tiny, 8, 0))
+
+
 def test_fault_injector_dropout_rate():
     fleet = make_hybrid_fleet(20, 20, seed=0)
     inj = FaultInjector(FaultConfig(dropout_prob=0.2), seed=0)
