@@ -1,0 +1,122 @@
+"""Hierarchical cross-facility federation vs the flat topology (paper §3.2).
+
+Matched protocol: every row trains the SAME total number of tier-1 rounds
+over the SAME fleet — the flat baseline runs them against one server, the
+hierarchical rows split the fleet into facilities that each run
+``LOCAL_ROUNDS`` rounds per tier-2 commit and ship ONE delta per commit
+over the modeled WAN (``comm.WANTopology``, dcn link class).  What the
+table shows:
+
+  * accuracy parity — two-tier aggregation matches flat quality at the
+    same tier-1 round budget;
+  * WAN traffic — the hierarchy moves `2 x facilities x commits` payloads
+    across the WAN instead of `2 x clients x rounds` (the paper's motivation
+    for facility-local aggregation);
+  * wall clock vs WAN bandwidth — the sweep prices the same run on
+    progressively worse inter-facility links; only the WAN legs stretch,
+    facility-local time is untouched.
+
+    PYTHONPATH=src:. python benchmarks/table_hierarchy.py
+"""
+from __future__ import annotations
+
+import time
+
+from repro.comm.transport import WANTopology
+from repro.core import FLConfig
+from repro.orchestrator import (HierarchicalOrchestrator, Orchestrator,
+                                make_facilities, make_hybrid_fleet)
+from benchmarks.common import ROUNDS, dataset_bundle, save
+
+N_CLIENTS = 24              # 12 HPC + 12 cloud, split across facilities
+PER_ROUND = 8               # clients per tier-1 round (per facility server)
+LOCAL_ROUNDS = 2            # tier-1 rounds per tier-2 commit
+SEED = 0
+FLOPS = 2e12
+
+
+def _fleet_and_data():
+    fed, model, params, loss_fn, eval_fn = dataset_bundle(
+        "medmnist", n_clients=N_CLIENTS, seed=SEED)
+    fleet = make_hybrid_fleet(N_CLIENTS // 2, N_CLIENTS // 2, seed=SEED,
+                              data_sizes=[fed.client_size(c)
+                                          for c in range(fed.num_clients)])
+    return fed, model, params, loss_fn, eval_fn, fleet
+
+
+def run_flat(n_rounds: int) -> dict:
+    fed, model, params, loss_fn, eval_fn, fleet = _fleet_and_data()
+    fl = FLConfig(num_clients=PER_ROUND, local_steps=2, client_lr=0.08)
+    orch = Orchestrator(fleet=fleet, fed_data=fed, loss_fn=loss_fn, fl=fl,
+                        batch_size=16, flops_per_client_round=FLOPS,
+                        eval_fn=eval_fn, eval_every=4, seed=SEED)
+    t0 = time.time()
+    p, _ = orch.run(params, n_rounds)
+    evals = [l.eval_metric for l in orch.logs if l.eval_metric == l.eval_metric]
+    return {
+        "topology": "flat", "facilities": 1,
+        "wan_GBps": None, "tier1_rounds": n_rounds,
+        "accuracy": float(eval_fn(p)),
+        "final_eval": float(evals[-1]) if evals else float("nan"),
+        # in the flat topology EVERY client payload crosses the server
+        # uplink — that is the traffic the hierarchy pulls off the WAN
+        "wan_bytes": orch.comm.total_bytes(),
+        "total_bytes": orch.comm.total_bytes(),
+        "sim_time_s": float(orch.virtual_clock),
+        "bench_wall_s": time.time() - t0,
+    }
+
+
+def run_hier(n_fac: int, commits: int, wan_GBps: float | None = None) -> dict:
+    fed, model, params, loss_fn, eval_fn, fleet = _fleet_and_data()
+    fl = FLConfig(num_clients=PER_ROUND, local_steps=2, client_lr=0.08)
+    facs = make_facilities(
+        n_fac, fleet, fed, loss_fn, fl, local_mode="sync",
+        local_rounds=LOCAL_ROUNDS, seed=SEED,
+        orch_kw=dict(batch_size=16, flops_per_client_round=FLOPS))
+    wan = WANTopology()
+    if wan_GBps is not None:
+        for i in range(n_fac):
+            wan.set_pair("server", f"fac{i}", bandwidth_GBps=wan_GBps)
+    hier = HierarchicalOrchestrator(facs, fl, inter_mode="sync", wan=wan,
+                                    eval_fn=eval_fn, eval_every=2, seed=SEED)
+    t0 = time.time()
+    p, _ = hier.run(params, commits)
+    return {
+        "topology": "hierarchical", "facilities": n_fac,
+        "wan_GBps": wan_GBps, "tier1_rounds": commits * LOCAL_ROUNDS,
+        "accuracy": float(eval_fn(p)),
+        "final_eval": float(hier.logs[-1].eval_metric),
+        "wan_bytes": hier.inter_facility_bytes,
+        "total_bytes": hier.total_bytes(),
+        "sim_time_s": float(hier.clock),
+        "bench_wall_s": time.time() - t0,
+    }
+
+
+def main():
+    commits = max(ROUNDS // LOCAL_ROUNDS, 2)
+    rows = [run_flat(commits * LOCAL_ROUNDS)]
+    for n_fac in (2, 4):
+        rows.append(run_hier(n_fac, commits))
+    # WAN bandwidth sweep at 2 facilities: dcn default is 6.25 GB/s
+    for bw in (0.625, 0.0625):
+        rows.append(run_hier(2, commits, wan_GBps=bw))
+
+    for r in rows:
+        print(", ".join(f"{k}={v}" for k, v in r.items()))
+    flat, h2 = rows[0], rows[1]
+    payload = {
+        "rows": rows,
+        "wan_bytes_ratio_2fac": h2["wan_bytes"] / max(flat["wan_bytes"], 1),
+        "accuracy_delta_2fac": h2["accuracy"] - flat["accuracy"],
+        "local_rounds": LOCAL_ROUNDS,
+        "clients": N_CLIENTS,
+    }
+    save("table_hierarchy", payload)
+    print(f"saved: wan_bytes_ratio_2fac={payload['wan_bytes_ratio_2fac']:.4f} "
+          f"accuracy_delta_2fac={payload['accuracy_delta_2fac']:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

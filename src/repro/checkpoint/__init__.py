@@ -1,2 +1,5 @@
 from repro.checkpoint.io import CheckpointManager, load_pytree, save_pytree  # noqa: F401
-from repro.checkpoint.async_state import AsyncCheckpointManager  # noqa: F401
+from repro.checkpoint.async_state import (  # noqa: F401
+    AsyncCheckpointManager, async_state_dict, hier_state_dict,
+    load_async_state, load_hier_state, load_sync_state, sync_state_dict,
+)

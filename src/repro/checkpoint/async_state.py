@@ -112,14 +112,7 @@ def async_state_dict(orch) -> tuple[dict, dict]:
         "buffer": buffer,
         "logs": [asdict(l) for l in orch.logs],
         "comm": [asdict(r) for r in orch.comm.records],
-        # lazy fleets (CohortFleet) serialise only the clients that ever
-        # dispatched — the rest are reconstructable from the cohort specs
-        "fleet": [{"cid": c.cid, "completions": c.completions,
-                   "failures": c.failures,
-                   "ema_round_time": c.ema_round_time,
-                   "last_selected_round": c.last_selected_round}
-                  for c in (orch.fleet.live.values()
-                            if hasattr(orch.fleet, "live") else orch.fleet)],
+        "fleet": _fleet_histories(orch.fleet),
         "events_processed": [list(e) for e in orch.events_processed],
     }
     # per-client data-sampler generators: lazy datasets serialise only the
@@ -133,6 +126,35 @@ def async_state_dict(orch) -> tuple[dict, dict]:
     if eng:
         state["engine"] = eng
     return state, deltas
+
+
+def _fleet_histories(fleet) -> list[dict]:
+    # lazy fleets (CohortFleet) serialise only the clients that ever
+    # dispatched — the rest are reconstructable from the cohort specs
+    return [{"cid": c.cid, "completions": c.completions,
+             "failures": c.failures, "ema_round_time": c.ema_round_time,
+             "last_selected_round": c.last_selected_round}
+            for c in (fleet.live.values() if hasattr(fleet, "live")
+                      else fleet)]
+
+
+def _restore_fleet_histories(fleet, histories: list[dict]):
+    """Snapshots carry histories only for touched clients; a fresh fleet's
+    untouched clients already hold the default history.  Lazy fleets index
+    by cid directly (their cid == index invariant materializes the client);
+    list fleets go through a cid map so sub-fleets with relabelled cids
+    restore correctly too."""
+    if hasattr(fleet, "live"):
+        lookup = lambda cid: fleet[cid]               # noqa: E731
+    else:
+        by_cid = {c.cid: c for c in fleet}
+        lookup = lambda cid: by_cid[cid]              # noqa: E731
+    for h in histories:
+        c = lookup(int(h["cid"]))
+        c.completions = int(h["completions"])
+        c.failures = int(h["failures"])
+        c.ema_round_time = float(h["ema_round_time"])
+        c.last_selected_round = int(h["last_selected_round"])
 
 
 def load_async_state(orch, state: dict, deltas: dict):
@@ -198,16 +220,7 @@ def load_async_state(orch, state: dict, deltas: dict):
     orch.logs = [CommitLog(**l) for l in state["logs"]]
     orch.comm.records = [TransferRecord(**r) for r in state["comm"]]
     orch.events_processed = [tuple(e) for e in state["events_processed"]]
-    # index by cid rather than iterating the fleet: lazy-fleet snapshots
-    # carry histories only for clients that dispatched (client cid == fleet
-    # index in every fleet builder), and a fresh fleet's untouched clients
-    # already hold the default history
-    for h in state["fleet"]:
-        c = orch.fleet[int(h["cid"])]
-        c.completions = int(h["completions"])
-        c.failures = int(h["failures"])
-        c.ema_round_time = float(h["ema_round_time"])
-        c.last_selected_round = int(h["last_selected_round"])
+    _restore_fleet_histories(orch.fleet, state["fleet"])
     if state.get("engine"):
         if not hasattr(orch, "load_engine_state"):
             raise ValueError(
@@ -216,6 +229,175 @@ def load_async_state(orch, state: dict, deltas: dict):
                 "BatchedAsyncOrchestrator")
         orch.load_engine_state(state["engine"])
     orch._after_restore()
+
+
+# ------------------------------------------------------------------ sync
+def sync_state_dict(orch) -> dict:
+    """Full mutable state of a synchronous ``Orchestrator``.
+
+    The flat sync path restarts statelessly from (params, round counter),
+    accepting a forked RNG trajectory; hierarchical facilities cannot —
+    a tier-1 facility's RNG streams, clock, logs and fleet histories feed
+    later tier-2 epochs, so bit-identical resume needs all of it."""
+    return {
+        "config": {"mode": "sync", "n_fleet": len(orch.fleet),
+                   "num_clients": orch.fl.num_clients,
+                   "local_steps": orch.fl.local_steps,
+                   "secure_agg": orch.fl.secure_agg,
+                   "exec_backend": orch.backend.name},
+        "backend": orch.backend.state(),
+        "clock": orch.virtual_clock,
+        "rng": orch.rng.bit_generator.state,
+        "jrng": np.asarray(orch.jrng, np.uint32).tolist(),
+        "selection_rng": orch.selection.rng.bit_generator.state,
+        "fault": orch.fault_injector.state(),
+        # selection returns numpy ints — coerce for the json encoder
+        "logs": [{**asdict(l), "selected": [int(s) for s in l.selected]}
+                 for l in orch.logs],
+        "comm": [asdict(r) for r in orch.comm.records],
+        "fleet": _fleet_histories(orch.fleet),
+        "data_rngs": [g.bit_generator.state for g in orch.fed_data._rngs],
+    }
+
+
+def load_sync_state(orch, state: dict):
+    """Overwrite a freshly constructed sync ``Orchestrator``'s state."""
+    from repro.comm.transport import TransferRecord
+    from repro.orchestrator.server import RoundLog
+
+    cfg = state["config"]
+    if cfg["n_fleet"] != len(orch.fleet) \
+            or cfg["num_clients"] != orch.fl.num_clients \
+            or cfg["local_steps"] != orch.fl.local_steps \
+            or cfg["secure_agg"] != orch.fl.secure_agg \
+            or cfg["exec_backend"] != orch.backend.name:
+        raise ValueError(
+            f"checkpoint was written by an orchestrator with config {cfg}; "
+            f"restore requires an identically configured one")
+    if state.get("backend"):
+        orch.backend.set_state(state["backend"])
+    orch.virtual_clock = float(state["clock"])
+    orch.rng.bit_generator.state = state["rng"]
+    orch.jrng = jnp.asarray(state["jrng"], jnp.uint32)
+    orch.selection.rng.bit_generator.state = state["selection_rng"]
+    orch.fault_injector.set_state(state["fault"])
+    orch.logs = [RoundLog(**l) for l in state["logs"]]
+    orch.comm.records = [TransferRecord(**r) for r in state["comm"]]
+    _restore_fleet_histories(orch.fleet, state["fleet"])
+    for g, s in zip(orch.fed_data._rngs, state["data_rngs"]):
+        g.bit_generator.state = s
+
+
+# ------------------------------------------------------------- hierarchy
+_FAC_UPD_FIELDS = ("seq", "fac", "dispatch_version", "dispatch_time",
+                   "wall_s", "up_seconds", "weight", "loss")
+
+
+def _fac_upd_meta(upd) -> dict:
+    d = {f: getattr(upd, f) for f in _FAC_UPD_FIELDS}
+    d["has_delta"] = upd.delta is not None
+    return d
+
+
+def hier_state_dict(hier):
+    """(json state, {seq: tier-2 delta}, [per-facility {seq: delta}]).
+
+    Tier-2 state mirrors the async serializer (heap, buffer, RNGs, logs,
+    WAN comm ledger); each facility contributes its own sub-orchestrator
+    snapshot via the regime-matching serializer above."""
+    t2_deltas = {}
+    events = []
+    for t, seq, upd in hier._events:
+        events.append({"time": t, **_fac_upd_meta(upd)})
+        if upd.delta is not None:
+            t2_deltas[upd.seq] = upd.delta
+    buffer = []
+    for upd, arrival in hier._buffer:
+        buffer.append({"arrival": arrival, **_fac_upd_meta(upd)})
+        if upd.delta is not None:
+            t2_deltas[upd.seq] = upd.delta
+    fac_states, fac_deltas = [], []
+    for fac in hier.facilities:
+        if fac.mode == "async":
+            st, fd = async_state_dict(fac.orch)
+        else:
+            st, fd = sync_state_dict(fac.orch), {}
+        fac_states.append({"mode": fac.mode, "name": fac.name,
+                           "local_rounds": fac.local_rounds, "state": st})
+        fac_deltas.append(fd)
+    state = {
+        "config": {"n_facilities": len(hier.facilities),
+                   "inter_mode": hier.inter_mode,
+                   "buffer_size": hier.async_cfg.buffer_size,
+                   "secure_agg": hier.fl.secure_agg,
+                   "modes": [f.mode for f in hier.facilities],
+                   "local_rounds": [f.local_rounds for f in hier.facilities]},
+        "clock": hier.clock,
+        "version": hier.version,
+        "seq": hier._seq,
+        "alpha": hier._alpha,
+        "dropped_stale": hier.dropped_stale,
+        "buffer_bytes": hier._buffer_bytes,
+        "rng": hier.rng.bit_generator.state,
+        "jrng": np.asarray(hier.jrng, np.uint32).tolist(),
+        "events": events,
+        "buffer": buffer,
+        "logs": [asdict(l) for l in hier.logs],
+        "comm": [asdict(r) for r in hier.comm.records],
+        "facilities": fac_states,
+    }
+    return state, t2_deltas, fac_deltas
+
+
+def load_hier_state(hier, state: dict, t2_deltas: dict,
+                    fac_deltas: list[dict]):
+    """Overwrite a freshly constructed ``HierarchicalOrchestrator``."""
+    from repro.comm.transport import TransferRecord
+    from repro.orchestrator.async_server import CommitLog
+    from repro.orchestrator.hierarchy import FacilityUpdate
+
+    cfg = state["config"]
+    if cfg["n_facilities"] != len(hier.facilities) \
+            or cfg["inter_mode"] != hier.inter_mode \
+            or cfg["buffer_size"] != hier.async_cfg.buffer_size \
+            or cfg["secure_agg"] != hier.fl.secure_agg \
+            or cfg["modes"] != [f.mode for f in hier.facilities] \
+            or cfg["local_rounds"] != [f.local_rounds
+                                       for f in hier.facilities]:
+        raise ValueError(
+            f"checkpoint was written by a hierarchy with config {cfg}; "
+            f"restore requires an identically configured one")
+    hier.clock = float(state["clock"])
+    hier.version = int(state["version"])
+    hier._seq = int(state["seq"])
+    hier._alpha = float(state["alpha"])
+    hier.dropped_stale = int(state["dropped_stale"])
+    hier._buffer_bytes = int(state["buffer_bytes"])
+    hier.rng.bit_generator.state = state["rng"]
+    hier.jrng = jnp.asarray(state["jrng"], jnp.uint32)
+
+    def mk_upd(meta):
+        upd = FacilityUpdate(**{f: meta[f] for f in _FAC_UPD_FIELDS})
+        if meta["has_delta"]:
+            upd.delta = t2_deltas[upd.seq]
+        return upd
+
+    hier._events = [(e["time"], e["seq"], mk_upd(e))
+                    for e in state["events"]]
+    heapq.heapify(hier._events)
+    hier._buffer = [(mk_upd(b), b["arrival"]) for b in state["buffer"]]
+    hier.logs = [CommitLog(**l) for l in state["logs"]]
+    hier.comm.records = [TransferRecord(**r) for r in state["comm"]]
+    for fac, meta, fd in zip(hier.facilities, state["facilities"],
+                             fac_deltas):
+        if meta["mode"] != fac.mode:
+            raise ValueError(
+                f"facility {meta['name']} was checkpointed in "
+                f"{meta['mode']} mode; restore facility runs {fac.mode}")
+        if fac.mode == "async":
+            load_async_state(fac.orch, meta["state"], fd)
+        else:
+            load_sync_state(fac.orch, meta["state"])
 
 
 class AsyncCheckpointManager(CheckpointManager):
@@ -262,4 +444,59 @@ class AsyncCheckpointManager(CheckpointManager):
                                    params_like)
                   for seq in seqs}
         load_async_state(orch, state, deltas)
+        return params, server_state
+
+    # ------------------------------------------------------- hierarchy
+    def save_hier(self, hier, params, server_state):
+        """Snapshot a two-tier run: tier-2 params/heap/buffer/RNGs plus
+        every facility's full sub-orchestrator state, one self-contained
+        directory per tier-2 commit."""
+        step_dir = self.step_dir(hier.version)
+        save_pytree(step_dir / "params.bin", params)
+        if server_state is not None:
+            save_pytree(step_dir / "server_state.bin", server_state)
+        state, t2_deltas, fac_deltas = hier_state_dict(hier)
+        for seq, delta in t2_deltas.items():
+            save_pytree(step_dir / f"t2delta_{seq:06d}.bin", delta)
+        for f, fd in enumerate(fac_deltas):
+            for seq, delta in fd.items():
+                save_pytree(step_dir / f"fac{f:02d}_delta_{seq:06d}.bin",
+                            delta)
+        _atomic_write(step_dir / "hier_state.json",
+                      json.dumps(state).encode())
+        _atomic_write(step_dir / "meta.json",
+                      json.dumps({"round": hier.version, "mode": "hier",
+                                  "clock": hier.clock}).encode())
+        self._finalize(step_dir)
+
+    def restore_hier(self, hier, params_like, rnd: int | None = None):
+        """Load the latest (or ``rnd``-th) hierarchy snapshot INTO ``hier``
+        (freshly constructed, same facility layout/configs as the writer)."""
+        rnd = rnd if rnd is not None else self.latest_round()
+        if rnd is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        step_dir = self.step_dir(rnd)
+        params = load_pytree(step_dir / "params.bin", params_like)
+        server_state = hier.init_server_state(params)
+        ss_path = step_dir / "server_state.bin"
+        if ss_path.exists():
+            server_state = load_pytree(ss_path, server_state)
+        state = json.loads((step_dir / "hier_state.json").read_text())
+        t2_seqs = [e["seq"] for e in state["events"] + state["buffer"]
+                   if e["has_delta"]]
+        t2_deltas = {seq: load_pytree(step_dir / f"t2delta_{seq:06d}.bin",
+                                      params_like)
+                     for seq in t2_seqs}
+        fac_deltas = []
+        for f, meta in enumerate(state["facilities"]):
+            fd = {}
+            if meta["mode"] == "async":
+                st = meta["state"]
+                for e in st["events"] + st["buffer"]:
+                    if e["has_delta"]:
+                        fd[e["seq"]] = load_pytree(
+                            step_dir / f"fac{f:02d}_delta_{e['seq']:06d}.bin",
+                            params_like)
+            fac_deltas.append(fd)
+        load_hier_state(hier, state, t2_deltas, fac_deltas)
         return params, server_state

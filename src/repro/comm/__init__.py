@@ -1,5 +1,5 @@
 from repro.comm.transport import (  # noqa: F401
     CommAccountant, LinkClass, GRPC_CLOUD, MPI_HPC, ICI, DCN, LINKS,
-    link_for_site,
+    SITE_LINKS, WANTopology, link_for_site,
 )
 from repro.comm.payload import serialize_tree, deserialize_tree, tree_bytes  # noqa: F401

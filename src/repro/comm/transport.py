@@ -36,15 +36,67 @@ DCN = LinkClass("dcn", 6.25, 1e-3)
 LINKS = {l.name: l for l in (GRPC_CLOUD, MPI_HPC, ICI, DCN)}
 
 
+# Explicit site→link table.  An unknown site is a configuration error and
+# must fail loudly: the old fallback silently billed any typo'd site string
+# at cloud latency, which skews every byte/time table it feeds.
+SITE_LINKS = {
+    "hpc": MPI_HPC,
+    "cloud": GRPC_CLOUD,
+}
+
+
 def link_for_site(site: str) -> LinkClass:
-    return MPI_HPC if site == "hpc" else GRPC_CLOUD
+    try:
+        return SITE_LINKS[site]
+    except KeyError:
+        raise KeyError(
+            f"unknown site {site!r}: no entry in SITE_LINKS "
+            f"(known: {sorted(SITE_LINKS)})") from None
+
+
+@dataclass
+class WANTopology:
+    """Per-facility-pair WAN link model for inter-facility transfers.
+
+    Every pair defaults to the DCN class; `set_pair` overrides bandwidth /
+    latency for a specific (symmetric) pair.  Jitter is an exponential tail
+    added on top of the deterministic transfer time — the draw comes from
+    the *caller's* RNG so hierarchical runs stay checkpoint-replayable.
+    Link objects keep the name "dcn" regardless of per-pair overrides so
+    accounting groups all WAN traffic under one link class.
+    """
+    default: LinkClass = DCN
+    jitter_s: float = 0.0
+    _pairs: dict = field(default_factory=dict)
+
+    @staticmethod
+    def _key(a: str, b: str) -> tuple[str, str]:
+        return (a, b) if a <= b else (b, a)
+
+    def set_pair(self, a: str, b: str, bandwidth_GBps: float | None = None,
+                 latency_s: float | None = None) -> None:
+        self._pairs[self._key(a, b)] = LinkClass(
+            self.default.name,
+            bandwidth_GBps if bandwidth_GBps is not None
+            else self.default.bandwidth_GBps,
+            latency_s if latency_s is not None else self.default.latency_s)
+
+    def link(self, a: str, b: str) -> LinkClass:
+        return self._pairs.get(self._key(a, b), self.default)
+
+    def transfer_time(self, a: str, b: str, nbytes: float,
+                      rng=None) -> float:
+        t = self.link(a, b).transfer_time(nbytes)
+        if self.jitter_s > 0.0 and rng is not None:
+            t += float(rng.exponential(self.jitter_s))
+        return t
 
 
 @dataclass
 class TransferRecord:
     rnd: int
     cid: int
-    direction: str      # up | down
+    direction: str      # up | down | inter_facility
     nbytes: int
     link: str
     seconds: float
@@ -56,8 +108,10 @@ class CommAccountant:
     records: list = field(default_factory=list)
 
     def log(self, rnd: int, cid: int, direction: str, nbytes: int,
-            link: LinkClass) -> float:
-        t = link.transfer_time(nbytes)
+            link: LinkClass, seconds: float | None = None) -> float:
+        """`seconds` overrides the link's deterministic transfer time —
+        used by WANTopology callers that add jitter on their own RNG."""
+        t = link.transfer_time(nbytes) if seconds is None else seconds
         self.records.append(TransferRecord(rnd, cid, direction, nbytes,
                                            link.name, t))
         return t

@@ -151,6 +151,18 @@ def build_fl_round_step(loss_fn: Callable, client_opt: Optimizer,
     intermediate (weights included!) across the mapped axis — measured as
     ~600 MB cross-pod all-gathers of the per-pod weight copies per layer per
     step (EXPERIMENTS.md §Perf iteration 4)."""
+    if (cfg.client_exec == "parallel" and client_spmd_axes is None
+            and shd.get_mesh() is not None):
+        # Not just a perf footgun: vmapping clients WITHOUT spmd_axis_name
+        # while the params carry full shardings makes GSPMD mis-partition
+        # the scan transpose — the PRIMAL loss comes out wrong (~5e-2 on
+        # the 2x2x2 mesh test before this guard; minimal trigger is a
+        # down-projection whose output dim is sharded over a batch axis).
+        raise ValueError(
+            "client_exec='parallel' under an active mesh requires "
+            "client_spmd_axes (the mesh axes the vmapped client dim is "
+            "sharded over, e.g. ('pod', 'data')); vmap without "
+            "spmd_axis_name over sharded params is numerically unsupported")
     local_train = build_local_train(loss_fn, client_opt, cfg, param_shardings)
     # explicit shardings mean the step lowers under GSPMD: keep the unfused
     # jnp stages (Pallas fusion has no sharding rules); an active mesh at

@@ -31,10 +31,13 @@ from repro.models import build_model
 from repro.models.cnn import CIFAR_CNN, CNN, MEDMNIST_CNN
 from repro.core import payload_bytes
 from repro.exec import BACKEND_NAMES, make_backend
+from repro.comm import LinkClass, WANTopology
 from repro.orchestrator import (AsyncOrchestrator, BatchedAsyncOrchestrator,
-                                FaultConfig, Orchestrator, StragglerPolicy,
+                                FaultConfig, HierarchicalOrchestrator,
+                                Orchestrator, StragglerPolicy,
                                 equivalent_preempt_rate_per_min,
-                                make_hybrid_fleet)
+                                make_facilities, make_hybrid_fleet,
+                                split_fleet)
 from repro.orchestrator.straggler import expected_attempt_s
 from repro.sched import HybridAdapter, JobSpec, K8sAdapter, SlurmAdapter
 
@@ -144,6 +147,34 @@ def main():
                          "secure aggregation): the server only sees masked "
                          "updates whose masks cancel within each round/"
                          "commit; works in BOTH --mode sync and async")
+    ap.add_argument("--facilities", type=int, default=0,
+                    help="two-tier federation: split the fleet into N "
+                         "facilities, each running --mode locally over its "
+                         "own backend, with a tier-2 server federating "
+                         "facility deltas over WAN (dcn) links; --rounds "
+                         "then counts tier-2 commits/epochs (0 = flat)")
+    ap.add_argument("--facility-backend", default="",
+                    choices=[""] + list(BACKEND_NAMES),
+                    help="execution backend each facility runs on "
+                         "(default: inherit --exec-backend)")
+    ap.add_argument("--inter-facility-mode", default="sync",
+                    choices=["sync", "async"],
+                    help="tier-2 regime: 'sync' barriers on every facility "
+                         "per epoch; 'async' commits facility deltas as "
+                         "they arrive, staleness-discounted")
+    ap.add_argument("--local-rounds", type=int, default=2,
+                    help="tier-1 rounds/commits one facility runs per "
+                         "tier-2 epoch")
+    ap.add_argument("--inter-buffer", type=int, default=1,
+                    help="async inter-facility mode: tier-2 commit every "
+                         "K facility deltas")
+    ap.add_argument("--wan-bw", type=float, default=6.25,
+                    help="inter-facility WAN bandwidth, GB/s (dcn class)")
+    ap.add_argument("--wan-latency", type=float, default=1e-3,
+                    help="inter-facility WAN latency, seconds")
+    ap.add_argument("--wan-jitter", type=float, default=0.0,
+                    help="exponential jitter tail added per WAN transfer, "
+                         "seconds (0 = deterministic)")
     ap.add_argument("--max-staleness", type=int, default=20)
     ap.add_argument("--commit-timeout", type=float, default=0.0,
                     help="async: commit a partial buffer after T sim-seconds")
@@ -253,7 +284,78 @@ def main():
                          recovery_overhead_s=args.recovery_overhead_s)
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume requires --checkpoint-dir")
-    if args.mode == "async":
+    if args.facilities:
+        fac_backend = args.facility_backend or args.exec_backend
+        subs, _ = split_fleet(fleet, args.facilities)
+
+        def backend_factory(f):
+            if fac_backend != "scheduler":
+                return make_backend("closed-form")
+            n_h = sum(c.site == "hpc" for c in subs[f])
+            n_c = max(1, sum(c.site == "cloud" for c in subs[f]))
+            return make_backend(
+                "scheduler",
+                slurm=SlurmAdapter(total_nodes=max(1, args.hpc_nodes or n_h),
+                                   seed=args.seed + 10 * f),
+                k8s=K8sAdapter(initial_nodes=max(1, n_c // 2), max_nodes=n_c,
+                               preempt_prob_per_min=args.spot_preempt_per_min,
+                               seed=args.seed + 10 * f + 1))
+
+        local_async = AsyncConfig(
+            buffer_size=args.buffer_k, staleness_exponent=args.staleness_exp,
+            max_staleness=args.max_staleness,
+            commit_timeout_s=args.commit_timeout,
+            max_concurrency=args.max_concurrency,
+            commit_chunk=args.commit_chunk)
+        facs = make_facilities(
+            args.facilities, fleet, fed, model.loss_fn, fl,
+            local_mode=args.mode, async_cfg=local_async,
+            local_rounds=args.local_rounds, backend_factory=backend_factory,
+            seed=args.seed,
+            orch_kw=dict(selection_name=args.selection,
+                         straggler=StragglerPolicy(), faults=faults,
+                         batch_size=args.batch_size,
+                         flops_per_client_round=3e12))
+        wan = WANTopology(
+            default=LinkClass("dcn", args.wan_bw, args.wan_latency),
+            jitter_s=args.wan_jitter)
+        mgr = (AsyncCheckpointManager(args.checkpoint_dir)
+               if args.checkpoint_dir else None)
+        hier = HierarchicalOrchestrator(
+            facs, fl, inter_mode=args.inter_facility_mode,
+            async_cfg=AsyncConfig(buffer_size=args.inter_buffer,
+                                  staleness_exponent=args.staleness_exp
+                                  if args.staleness_exp != "adaptive"
+                                  else 0.5,
+                                  max_staleness=args.max_staleness),
+            wan=wan, server_opt_name=args.server_opt, eval_fn=eval_fn,
+            eval_every=1, checkpoint_mgr=mgr,
+            checkpoint_every=args.checkpoint_every, seed=args.seed)
+        server_state = None
+        if args.resume and mgr.latest_round() is not None:
+            params, server_state = mgr.restore_hier(hier, params)
+            print(f"resumed hierarchical run at commit {hier.version} "
+                  f"(sim t={hier.clock:.1f}s, {len(hier._events)} facility "
+                  f"deltas in flight, {len(hier._buffer)} buffered)")
+        params, _ = hier.run(params, args.rounds, server_state=server_state,
+                             verbose=True)
+        summary = {
+            "dataset": args.dataset, "algo": args.algo, "mode": "hier",
+            "local_mode": args.mode,
+            "inter_facility_mode": args.inter_facility_mode,
+            "facilities": args.facilities,
+            "local_rounds": args.local_rounds,
+            "exec_backend": fac_backend,
+            "secure_agg": args.secure_agg,
+            "commits": hier.version,
+            "dropped_stale": hier.dropped_stale,
+            "final_eval": hier.logs[-1].eval_metric if hier.logs else None,
+            "virtual_time_s": hier.clock,
+            "inter_facility_bytes": hier.inter_facility_bytes,
+            "total_bytes": hier.total_bytes(),
+            "facility_clocks": [f.clock for f in facs],
+        }
+    elif args.mode == "async":
         if args.deadline_s or args.fastest_k:
             print("warning: --deadline-s/--fastest-k are barrier-round "
                   "mitigations; the async regime ignores them (staleness "

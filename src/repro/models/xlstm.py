@@ -12,8 +12,17 @@ paper.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.7 (check_vma kwarg)
+    def shard_map(f, **kw):
+        kw["check_vma"] = kw.pop("check_rep", False)
+        return _shard_map(f, **kw)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import XLSTMConfig
 from repro.models import sharding as sh
@@ -156,14 +165,14 @@ def mlstm_apply(p, x, *, n_heads: int, cfg: XLSTMConfig, mode="train",
 # ---------------------------------------------------------------------------
 
 def init_slstm(builder, path, d_model: int, n_heads: int, n_groups: int):
-    """Recurrent tensor parallelism: the OUTPUT dim of every gate projection
-    and the e-dim of the recurrent matrices are `model`-sharded, so the
-    per-timestep gate/cell states (and crucially their weight GRADIENTS) stay
-    sharded — replicated recurrent weights otherwise force a psum of the
-    full weight-grad every timestep of the 4096-step scan (measured 38 MB x
-    4096 x groups = 0.9 TB/round; EXPERIMENTS.md §Perf iteration 3).  The
-    price is an all-gather of h [B,H,hd] (~50 KB) per step for the next
-    step's recurrence."""
+    """Recurrent tensor parallelism by HEAD sharding: the sLSTM recurrence
+    is block-diagonal per head (einsum contracts d->e WITHIN a head), so
+    `model`-sharding the HEAD dim of the recurrent matrices makes the whole
+    scan communication-free — each shard owns H/m heads end to end, and the
+    recurrent-weight cotangents accumulate shard-locally (no per-timestep
+    psum of the full weight grad; the scan body runs under shard_map, see
+    ``slstm_apply``).  The gate projections stay output-dim sharded, which
+    under the head layout is the same elements grouped head-major."""
     hd = d_model // n_heads
     g = (n_groups,) if n_groups else ()
     pre = (None,) if n_groups else ()
@@ -172,28 +181,28 @@ def init_slstm(builder, path, d_model: int, n_heads: int, n_groups: int):
         add({}, path + [f"w{gate}"], g + (d_model, d_model),
             pre + (sh.DATA, sh.MODEL))
         add({}, path + [f"r{gate}"], g + (n_heads, hd, hd),
-            pre + (None, None, sh.MODEL))
+            pre + (sh.MODEL, None, None))
         add({}, path + [f"b{gate}"], g + (d_model,), pre + (sh.MODEL,),
             init="zeros" if gate != "f" else (lambda k, s: jnp.full(s, 3.0)))
     add({}, path + ["down"], g + (d_model, d_model), pre + (sh.MODEL, sh.DATA))
 
 
-def _slstm_step(p, carry, xt, n_heads):
-    """One sLSTM time step.  xt [B, D] pre-projected gate inputs tuple."""
-    c, n, h, m = carry                                    # [B,H,hd] each, m [B,H,hd]
-    B = xt[0].shape[0]
-    H = n_heads
-    hd = c.shape[-1]
+def _slstm_step(p, carry, xt):
+    """One sLSTM time step.  xt: tuple of [B,H,hd] pre-projected gate inputs.
+
+    Everything here is per-head (the einsum contracts within a head), so a
+    head-sharded caller can run this shard-locally with H/m heads."""
+    c, n, h, m = carry                                    # [B,H,hd] each
 
     def rec(w, hh):  # block-diagonal recurrent projection
         return jnp.einsum("bhd,hde->bhe", hh, w)
 
     xi, xf, xz, xo = xt
     hi = h
-    i_t = xi.reshape(B, H, hd) + rec(p["ri"], hi)
-    f_t = xf.reshape(B, H, hd) + rec(p["rf"], hi)
-    z_t = jnp.tanh(xz.reshape(B, H, hd) + rec(p["rz"], hi))
-    o_t = jax.nn.sigmoid(xo.reshape(B, H, hd) + rec(p["ro"], hi))
+    i_t = xi + rec(p["ri"], hi)
+    f_t = xf + rec(p["rf"], hi)
+    z_t = jnp.tanh(xz + rec(p["rz"], hi))
+    o_t = jax.nn.sigmoid(xo + rec(p["ro"], hi))
     lf = jax.nn.log_sigmoid(f_t)
     m_new = jnp.maximum(lf + m, i_t)
     i_w = jnp.exp(i_t - m_new)
@@ -204,31 +213,118 @@ def _slstm_step(p, carry, xt, n_heads):
     return (c_new, n_new, h_new, m_new)
 
 
+def _scan_slstm(rp, xs, carry0):
+    """Scan the sLSTM over time.  xs: tuple of [S,B,H,hd] gate inputs."""
+    def body(carry, xt):
+        new = _slstm_step(rp, carry, xt)
+        return new, new[2]
+
+    return jax.lax.scan(body, carry0, xs)
+
+
+def _slstm_block(x, ws, bs, rp, down, carry0, *, model_axis, out_dtype):
+    """The whole sLSTM block, shard-local: gate projections (output dim =
+    this shard's heads), the recurrent scan over those heads, and the down
+    projection (partial over the model axis, psummed here)."""
+    B, S, _ = x.shape
+    Hl, hd = carry0[0].shape[1], carry0[0].shape[2]
+    xs = tuple((x @ w + b).swapaxes(0, 1).astype(jnp.float32)
+               .reshape(S, B, Hl, hd) for w, b in zip(ws, bs))
+    carry, hs = _scan_slstm(rp, xs, carry0)
+    y = hs.swapaxes(0, 1).reshape(B, S, Hl * hd).astype(out_dtype)
+    out = y @ down
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+    return out, carry
+
+
+def _head_shard_mesh(n_heads: int):
+    """Mesh to head-shard the sLSTM block over, or None for the plain path.
+
+    The recurrence is communication-free only if each `model` shard owns
+    whole heads; when the mesh is absent, the model axis is vmap-excluded,
+    or H doesn't divide, fall back to the replicated scan (GSPMD then
+    partitions the time-parallel projections only, which is correct — the
+    divergence this guards against came from GSPMD transposing the scan
+    with model-sharded recurrent weights, not from the fallback)."""
+    mesh = sh.get_mesh()
+    if mesh is None or sh.MODEL not in mesh.axis_names:
+        return None
+    if sh.MODEL in sh.excluded_axes():
+        return None
+    m = mesh.shape[sh.MODEL]
+    if m <= 1 or n_heads % m != 0:
+        return None
+    return mesh
+
+
 def slstm_apply(p, x, *, n_heads: int, mode="train", state=None):
     B, S, D = x.shape
-    hd = D // n_heads
-    xi, xf, xz, xo = (x @ p["wi"] + p["bi"], x @ p["wf"] + p["bf"],
-                      x @ p["wz"] + p["bz"], x @ p["wo"] + p["bo"])
+    H, hd = n_heads, D // n_heads
 
     if state is None:
         z0 = jnp.zeros((B, n_heads, hd), jnp.float32)
         state = {"c": z0, "n": z0 + 1e-6, "h": z0, "m": z0}
     carry0 = (state["c"], state["n"], state["h"], state["m"])
+    rp = {k: p[k] for k in ("ri", "rf", "rz", "ro")}
 
+    mesh = _head_shard_mesh(n_heads) if mode in ("train", "prefill") else None
+    if mesh is not None:
+        # One shard_map over the whole block, moe-style: heads manual over
+        # the model axis, tokens over whichever batch axes divide B.  Every
+        # cotangent that crosses the boundary does so along a MENTIONED
+        # axis (tokens) or replicated params — with check_rep=False, an
+        # output left unmentioned on an axis gets per-shard-inconsistent
+        # cotangents whenever the incoming cotangent is sharded over it
+        # (exactly what the batch-sharded residual stream produces), which
+        # is how the pre-shard_map backward diverged.
+        P = jax.sharding.PartitionSpec
+        tok = []
+        rem = B
+        for a in sh.batch_axes(mesh):
+            if rem % mesh.shape[a] == 0:
+                tok.append(a)
+                rem //= mesh.shape[a]
+        tok = tuple(tok) if tok else None
+        ws = tuple(p[f"w{g}"] for g in "ifzo")
+        bs = tuple(p[f"b{g}"] for g in "ifzo")
+        fn = partial(_slstm_block, model_axis=sh.MODEL, out_dtype=x.dtype)
+        out, carry = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(tok, None, None),
+                      tuple(P(None, sh.MODEL) for _ in ws),
+                      tuple(P(sh.MODEL) for _ in bs),
+                      {k: P(sh.MODEL, None, None) for k in rp},
+                      P(sh.MODEL, None),
+                      tuple(P(tok, sh.MODEL, None) for _ in carry0)),
+            out_specs=(P(tok, None, None),
+                       tuple(P(tok, sh.MODEL, None) for _ in carry0)),
+            check_rep=False,
+        )(x, ws, bs, rp, p["down"], carry0)
+        # Pin the output (and hence, through the constraint's transpose, its
+        # cotangent) to exactly the sharding the shard_map declared: batch
+        # axes that don't divide B stay unmentioned, and an unmentioned-axis
+        # cotangent must be replicated over that axis or the transpose reads
+        # inconsistent per-shard values.
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(
+                mesh, P(tok, None, None)))
+        st = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+        return out, (st if mode == "prefill" else None)
+
+    xi, xf, xz, xo = (x @ p["wi"] + p["bi"], x @ p["wf"] + p["bf"],
+                      x @ p["wz"] + p["bz"], x @ p["wo"] + p["bo"])
     if mode in ("train", "prefill"):
-        xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (xi, xf, xz, xo))
-
-        def body(carry, xt):
-            new = _slstm_step(p, carry, xt, n_heads)
-            return new, new[2]
-
-        carry, hs = jax.lax.scan(body, carry0, xs)
+        xs = tuple(a.swapaxes(0, 1).astype(jnp.float32).reshape(S, B, H, hd)
+                   for a in (xi, xf, xz, xo))
+        carry, hs = _scan_slstm(rp, xs, carry0)
         y = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
         out = y @ p["down"]
         st = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
         return out, (st if mode == "prefill" else None)
 
-    xt = tuple(a[:, 0].astype(jnp.float32) for a in (xi, xf, xz, xo))
-    carry = _slstm_step(p, carry0, xt, n_heads)
+    xt = tuple(a[:, 0].astype(jnp.float32).reshape(B, H, hd)
+               for a in (xi, xf, xz, xo))
+    carry = _slstm_step(rp, carry0, xt)
     y = carry[2].reshape(B, 1, D).astype(x.dtype)
     return y @ p["down"], {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

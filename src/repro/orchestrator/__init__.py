@@ -4,6 +4,10 @@ from repro.orchestrator.straggler import StragglerPolicy, apply_mitigation, simu
 from repro.orchestrator.fault import FaultConfig, FaultInjector, equivalent_preempt_rate_per_min  # noqa: F401
 from repro.orchestrator.server import Orchestrator, RoundLog  # noqa: F401
 from repro.orchestrator.async_server import AsyncOrchestrator, CommitLog, PendingUpdate  # noqa: F401
+from repro.orchestrator.hierarchy import (  # noqa: F401
+    Facility, FacilityResult, FacilityUpdate, HierarchicalOrchestrator,
+    make_facilities, split_fleet,
+)
 from repro.orchestrator.megafleet import (  # noqa: F401
     BatchedAsyncOrchestrator, CohortFleet, CohortSpec, make_mega_fleet,
 )

@@ -86,6 +86,9 @@ class CommitLog:
     #                                    committed updates (scheduler backend)
     n_overflow: int = 0                # committed updates that ran off their
     #                                    home site (elastic HPC->cloud burst)
+    inter_facility_bytes: int = 0      # WAN bytes (dcn link) the committed
+    #                                    facility deltas paid — hierarchy
+    #                                    tier-2 commits only, 0 in flat runs
     recovery_actions: list = field(default_factory=list)
     #                                  # "fault:policy" decisions the adaptive
     #                                    recovery policy took since the

@@ -127,3 +127,22 @@ def test_hierarchical_matches_flat_when_uncompressed(setup):
     p2 = s2(params, *args)[0]
     for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-6)
+
+
+def test_parallel_under_mesh_requires_spmd_axes(setup):
+    # vmapping clients without spmd_axis_name while a mesh is active is the
+    # layout that made GSPMD mis-partition the scan transpose (wrong primal
+    # loss) — the builder must reject it loudly at build time
+    m, _, _ = setup
+    from repro.models import sharding as sh
+    mesh = jax.make_mesh((1,), ("data",))
+    fl = FLConfig(num_clients=C, local_steps=H, client_lr=0.1,
+                  client_exec="parallel")
+    with sh.use_mesh(mesh):
+        with pytest.raises(ValueError, match="client_spmd_axes"):
+            build_fl_round_step(m.loss_fn, get_client_optimizer("sgd"),
+                                get_server_optimizer("fedavg"), fl)
+        # declaring the mapped axes is the supported layout
+        build_fl_round_step(m.loss_fn, get_client_optimizer("sgd"),
+                            get_server_optimizer("fedavg"), fl,
+                            client_spmd_axes="data")

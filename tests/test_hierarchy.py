@@ -1,0 +1,233 @@
+"""Hierarchical (two-tier) federation: facilities over modeled WAN links.
+
+Pins the subsystem's contracts:
+  * link accounting — ``link_for_site`` fails loudly on unknown sites and
+    inter-facility traffic is billed on the ``dcn`` class with the
+    ``inter_facility`` direction (the old behaviour silently billed typo'd
+    sites at cloud latency and WAN legs at client-uplink cost);
+  * a 1-facility hierarchy IS the flat federation (params to 1e-6, same
+    round logs) — the degenerate-case equivalence that keeps tier-2 honest;
+  * kill/--resume is bit-identical for every (local_mode, inter_mode)
+    combination: final params, tier-2 commit logs, WAN ledger and every
+    facility's tier-1 logs/ledger all replay exactly;
+  * facilities run on scheduler-backed execution (Slurm/K8s adapters)
+    exactly like flat orchestrators do.
+"""
+import math
+import shutil
+from dataclasses import asdict
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointManager
+from repro.comm.transport import (DCN, GRPC_CLOUD, MPI_HPC, WANTopology,
+                                  link_for_site)
+from repro.core import AsyncConfig, FLConfig
+from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
+from repro.exec import SchedulerBackend
+from repro.models.cnn import CNN, CNNConfig
+from repro.orchestrator import (HierarchicalOrchestrator, Orchestrator,
+                                make_facilities, make_hybrid_fleet)
+from repro.sched import HybridAdapter, K8sAdapter, SlurmAdapter
+
+CFG = CNNConfig("tiny-cnn", (28, 28, 1), 9, channels=(4, 8), dense=32)
+SEED, N = 11, 8
+
+_MODEL = CNN(CFG)
+_DATA = medmnist_like(n=400, seed=SEED)
+_PARTS = partition_dirichlet(_DATA.y, N, alpha=0.5, seed=SEED)
+_PARAMS0 = _MODEL.init(jax.random.PRNGKey(SEED))
+_FL = FLConfig(mode="sync", num_clients=4, local_steps=1, client_lr=0.05)
+
+# the jit'd steps depend only on (model cfg, FLConfig, async cfg) — all
+# fixed here — so share them across orchestrator instances: the suite
+# compiles each step once instead of once per run
+_STEP_CACHE: dict = {}
+
+
+def _share_steps(hier):
+    for fac in hier.facilities:
+        if fac.mode == "sync":
+            key = ("t1-sync",)
+            if key in _STEP_CACHE:
+                fac.orch._round_step = _STEP_CACHE[key]
+            else:
+                _STEP_CACHE[key] = fac.orch._round_step
+        else:
+            key = ("t1-async", fac.orch.async_cfg.buffer_size)
+            if key in _STEP_CACHE:
+                fac.orch._client_update, fac.orch._commit_step = _STEP_CACHE[key]
+            else:
+                _STEP_CACHE[key] = (fac.orch._client_update,
+                                    fac.orch._commit_step)
+    key = ("t2", hier.async_cfg.buffer_size)
+    if key in _STEP_CACHE:
+        hier._commit_step = _STEP_CACHE[key]
+    else:
+        _STEP_CACHE[key] = hier._commit_step
+    return hier
+
+
+def _fleet():
+    return make_hybrid_fleet(N // 2, N - N // 2, seed=SEED,
+                             data_sizes=[len(p) for p in _PARTS])
+
+
+def _fed():
+    return FederatedDataset(_DATA, _PARTS, seed=SEED)
+
+
+def _hier(n_fac=2, local_mode="sync", inter_mode="sync", local_rounds=2,
+          mgr=None, every=0, backend_factory=None, wan=None):
+    facs = make_facilities(
+        n_fac, _fleet(), _fed(), _MODEL.loss_fn, _FL, local_mode=local_mode,
+        async_cfg=AsyncConfig(buffer_size=2, max_concurrency=3),
+        local_rounds=local_rounds, backend_factory=backend_factory,
+        seed=SEED, orch_kw=dict(batch_size=8, flops_per_client_round=2e12))
+    return _share_steps(HierarchicalOrchestrator(
+        facs, _FL, inter_mode=inter_mode,
+        async_cfg=AsyncConfig(buffer_size=1) if inter_mode == "async" else None,
+        wan=wan, checkpoint_mgr=mgr, checkpoint_every=every, seed=SEED))
+
+
+def _norm(o):
+    if isinstance(o, dict):
+        return {k: _norm(v) for k, v in o.items()}
+    if isinstance(o, (list, tuple)):
+        return [_norm(x) for x in o]
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, float) and math.isnan(o):
+        return "nan"
+    if isinstance(o, np.floating):
+        return float(o)
+    return o
+
+
+# ------------------------------------------------------------ link accounting
+def test_link_for_site_known_sites():
+    assert link_for_site("hpc") is MPI_HPC
+    assert link_for_site("cloud") is GRPC_CLOUD
+
+
+def test_link_for_site_unknown_site_fails_loudly():
+    with pytest.raises(KeyError, match="unknown site 'cluod'"):
+        link_for_site("cluod")
+
+
+def test_wan_topology_pair_override_and_jitter():
+    wan = WANTopology()
+    assert wan.link("a", "b") is DCN
+    wan.set_pair("a", "b", bandwidth_GBps=0.5, latency_s=0.1)
+    lk = wan.link("b", "a")            # symmetric
+    assert lk.name == "dcn"            # overrides keep the dcn link class
+    assert lk.bandwidth_GBps == 0.5 and lk.latency_s == 0.1
+    assert wan.link("a", "c") is DCN   # other pairs untouched
+    t0 = wan.transfer_time("a", "b", 1e9)
+    assert t0 == pytest.approx(0.1 + 1e9 / 0.5e9)
+    jittery = WANTopology(jitter_s=0.5)
+    rng = np.random.default_rng(0)
+    draws = {jittery.transfer_time("a", "b", 1e6, rng=rng) for _ in range(4)}
+    assert len(draws) == 4             # exponential tail varies per draw
+    base = DCN.transfer_time(1e6)
+    assert all(d > base for d in draws)
+
+
+# ----------------------------------------------------------------- two tiers
+def test_two_facility_sync_over_dcn():
+    hier = _hier(local_mode="sync", inter_mode="sync")
+    hier.run(_PARAMS0, 3)
+    assert hier.version == 3
+    assert hier.comm.records, "tier-2 must log WAN transfers"
+    # every inter-facility transfer is billed on the dcn class, and the
+    # tier-2 ledger holds ONLY inter-facility traffic (client up/down stays
+    # in the facility ledgers)
+    assert all(r.link == "dcn" for r in hier.comm.records)
+    assert all(r.direction == "inter_facility" for r in hier.comm.records)
+    assert hier.inter_facility_bytes > 0
+    assert hier.logs[-1].inter_facility_bytes > 0
+    # tier-1 client traffic stays on site links inside the facilities
+    for fac in hier.facilities:
+        assert fac.orch.comm.records
+        assert all(r.link in ("mpi_hpc", "grpc_cloud")
+                   for r in fac.orch.comm.records)
+
+
+def test_two_facility_async_commits_with_staleness():
+    hier = _hier(local_mode="async", inter_mode="async")
+    hier.run(_PARAMS0, 4)
+    assert hier.version == 4
+    assert hier.clock > 0.0
+    assert all(not math.isnan(l.mean_staleness) for l in hier.logs)
+
+
+def test_one_facility_hierarchy_is_flat():
+    hier = _hier(n_fac=1, local_mode="sync", inter_mode="sync",
+                 local_rounds=3)
+    ph, _ = hier.run(_PARAMS0, 1)
+
+    flat = Orchestrator(fleet=_fleet(), fed_data=_fed(),
+                        loss_fn=_MODEL.loss_fn, fl=_FL, batch_size=8,
+                        flops_per_client_round=2e12, seed=SEED)
+    flat._round_step = _STEP_CACHE[("t1-sync",)]
+    pf, _ = flat.run(_PARAMS0, 3)
+    err = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+              for a, b in zip(jax.tree.leaves(ph), jax.tree.leaves(pf)))
+    assert err < 1e-6
+    flog = hier.facilities[0].orch.logs
+    assert len(flog) == len(flat.logs)
+    for a, b in zip(flog, flat.logs):
+        assert a.selected == b.selected
+        assert a.participated == b.participated
+        assert abs(a.client_loss - b.client_loss) < 1e-6
+
+
+# ------------------------------------------------------------- kill / resume
+@pytest.mark.parametrize("local_mode,inter_mode", [
+    ("sync", "sync"), ("async", "async"), ("async", "sync"),
+    ("sync", "async")])
+def test_hier_resume_bit_identical(tmp_path, local_mode, inter_mode):
+    ck = str(tmp_path / f"hier-ck-{local_mode}-{inter_mode}")
+    shutil.rmtree(ck, ignore_errors=True)
+    straight = _hier(local_mode=local_mode, inter_mode=inter_mode)
+    ps, _ = straight.run(_PARAMS0, 4)
+
+    killed = _hier(local_mode=local_mode, inter_mode=inter_mode,
+                   mgr=AsyncCheckpointManager(ck), every=1)
+    killed.run(_PARAMS0, 2)
+
+    resumed = _hier(local_mode=local_mode, inter_mode=inter_mode,
+                    mgr=AsyncCheckpointManager(ck), every=1)
+    params, server_state = resumed.checkpoint_mgr.restore_hier(
+        resumed, _PARAMS0)
+    assert resumed.version == 2
+    pr, _ = resumed.run(params, 4, server_state=server_state)
+
+    assert all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(ps), jax.tree.leaves(pr)))
+    assert _norm([asdict(l) for l in straight.logs]) == \
+        _norm([asdict(l) for l in resumed.logs])
+    assert _norm([asdict(r) for r in straight.comm.records]) == \
+        _norm([asdict(r) for r in resumed.comm.records])
+    for sf, rf in zip(straight.facilities, resumed.facilities):
+        assert _norm([asdict(l) for l in sf.orch.logs]) == \
+            _norm([asdict(l) for l in rf.orch.logs])
+        assert _norm([asdict(r) for r in sf.orch.comm.records]) == \
+            _norm([asdict(r) for r in rf.orch.comm.records])
+
+
+# ------------------------------------------------------- scheduler facilities
+def test_facilities_on_scheduler_backend():
+    def backend_factory(f):
+        return SchedulerBackend(HybridAdapter(
+            slurm=SlurmAdapter(total_nodes=8, seed=f),
+            k8s=K8sAdapter(initial_nodes=8, max_nodes=8, seed=f + 1)))
+
+    hier = _hier(local_mode="sync", inter_mode="async",
+                 backend_factory=backend_factory)
+    hier.run(_PARAMS0, 3)
+    assert hier.version == 3
+    assert all(r.direction == "inter_facility" and r.link == "dcn"
+               for r in hier.comm.records)

@@ -43,8 +43,16 @@ with sh.use_mesh(mesh):
                   fedprox_mu=0.01, client_exec="%(exec)s",
                   compression=CompressionConfig(quantize_bits=8),
                   accum_dtype="float32")
+    # parallel mode MUST declare the mesh axes the vmapped client dim is
+    # sharded over (the production layout — launch.dryrun does the same).
+    # vmapping WITHOUT spmd_axis_name while the params carry full shardings
+    # is an unsupported layout: GSPMD mis-partitions the scan transpose and
+    # the primal loss itself comes out wrong (this is what the old xfail on
+    # xlstm/parallel was really masking).
+    spmd = ("pod", "data") if "%(exec)s" == "parallel" else None
     step = build_fl_round_step(m.loss_fn, get_client_optimizer("sgd"),
-                               get_server_optimizer("fedavg"), fl, n_pods=2)
+                               get_server_optimizer("fedavg"), fl, n_pods=2,
+                               client_spmd_axes=spmd)
     params = m.init(jax.random.PRNGKey(0))
     param_sh = sp.sanitize_specs(
         jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
@@ -57,8 +65,16 @@ with sh.use_mesh(mesh):
     if cfg.cross_attn_every:
         batches["patches"] = jax.random.normal(
             jax.random.PRNGKey(2), (C, H, b, cfg.n_patches, cfg.d_model), jnp.float32)
+    if spmd:
+        # client dim sharded over pod x data, matching client_spmd_axes
+        batches = jax.tree.map(lambda x: jax.device_put(
+            x, NamedSharding(mesh, P(spmd, *(None,) * (x.ndim - 1)))), batches)
+        batch_sh = jax.tree.map(
+            lambda x: NamedSharding(mesh, P(spmd, *(None,) * (x.ndim - 1))), batches)
+    else:
+        batch_sh = None
     with mesh:
-        jstep = jax.jit(step, in_shardings=(param_sh, None, None, None, None, None),
+        jstep = jax.jit(step, in_shardings=(param_sh, None, batch_sh, None, None, None),
                         out_shardings=(param_sh, None, None))
         p1, _, metrics = jstep(params, (), batches, jnp.ones((C,)),
                                jnp.ones((C,)), jax.random.PRNGKey(3))
@@ -107,17 +123,11 @@ def run_case(arch: str, exec_mode: str, param_tol: float):
     ("granite-3-2b", "sequential", 3e-2),
     ("granite-3-2b", "pod_sequential", 3e-2),
     ("qwen3-moe-235b-a22b", "sequential", 2e-1),
-    pytest.param(
-        "xlstm-125m", "parallel", 3e-2,
-        marks=pytest.mark.xfail(
-            reason="sLSTM recurrent-TP backward diverges under GSPMD: the "
-                   "forward loss matches unsharded to 1e-6, but the scan "
-                   "transpose mis-accumulates the model-sharded recurrent "
-                   "weight cotangents (slstm grad rel-err > 1 on the 2x2x2 "
-                   "CPU mesh, every exec mode — not vmap-specific; explicit "
-                   "carry sharding constraints do not help).  Needs a "
-                   "shard_map'd scan body; ROADMAP open item.",
-            strict=False)),
+    # xlstm/parallel exercises the head-sharded shard_map sLSTM scan: the
+    # recurrence is block-diagonal per head, so each model shard owns whole
+    # heads and the r* cotangents accumulate shard-locally (the GSPMD scan
+    # transpose used to mis-accumulate them when r* was e-dim sharded).
+    ("xlstm-125m", "parallel", 3e-2),
 ])
 def test_sharded_round_matches_unsharded(arch, exec_mode, param_tol):
     run_case(arch, exec_mode, param_tol)
