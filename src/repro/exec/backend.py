@@ -107,6 +107,17 @@ class ExecutionBackend(abc.ABC):
             [client], flops_per_client, payload_bytes, self.rng,
             self.straggler)[0])
 
+    def begin_window(self, n: int):
+        """Window hint: the orchestrator expects up to ``n`` dispatches
+        before the next commit.  The base behaviour reserves an ``n``-sized
+        block on the bound RNG (when it supports block reservation — the
+        event-window engine's ``BlockedGenerator``), so all of the window's
+        contention-noise draws come from ONE vectorized call.  Backends may
+        additionally amortize per-dispatch bookkeeping across the window."""
+        r = getattr(self, "rng", None)
+        if hasattr(r, "reserve"):
+            r.reserve(n)
+
     @abc.abstractmethod
     def execute(self, client, flops_per_client: float, payload_bytes: int,
                 now: float) -> ClientExecution:
@@ -195,6 +206,7 @@ class SchedulerBackend(ExecutionBackend):
     def __init__(self, hybrid: HybridAdapter | None = None):
         self.hybrid = hybrid or HybridAdapter()
         self._open_round_jobs: list[str] = []
+        self._prune_credit = 0
 
     # ------------------------------------------------------------- dispatch
     def _spec_for(self, client) -> JobSpec:
@@ -206,8 +218,21 @@ class SchedulerBackend(ExecutionBackend):
             site=client.site,
             preemptible=client.profile.spot)
 
-    def _submit(self, client, work_s: float, now: float):
+    def begin_window(self, n: int):
+        """One terminal-job GC for the whole window instead of one per
+        submit.  ``prune_terminal`` only deletes TERMINAL jobs from the
+        adapters' tables — it never changes a scheduling decision — so
+        deferring it is trajectory-invariant (a mid-window checkpoint may
+        carry a few extra terminal jobs; they are pruned on first use)."""
+        super().begin_window(n)
         self.hybrid.prune_terminal()
+        self._prune_credit = int(n)
+
+    def _submit(self, client, work_s: float, now: float):
+        if self._prune_credit > 0:
+            self._prune_credit -= 1
+        else:
+            self.hybrid.prune_terminal()
         self.hybrid.advance_to(now)
         h = self.hybrid.submit(self._spec_for(client), work_s=work_s)
         self.hybrid.advance_to(self.hybrid.clock)   # settle: start if room

@@ -33,6 +33,7 @@ from repro.core import payload_bytes
 from repro.exec import BACKEND_NAMES, make_backend
 from repro.comm import LinkClass, WANTopology
 from repro.orchestrator import (AsyncOrchestrator, BatchedAsyncOrchestrator,
+                                CohortFleet, EventWindowOrchestrator,
                                 FaultConfig, HierarchicalOrchestrator,
                                 Orchestrator, StragglerPolicy,
                                 equivalent_preempt_rate_per_min,
@@ -40,6 +41,21 @@ from repro.orchestrator import (AsyncOrchestrator, BatchedAsyncOrchestrator,
                                 split_fleet)
 from repro.orchestrator.straggler import expected_attempt_s
 from repro.sched import HybridAdapter, JobSpec, K8sAdapter, SlurmAdapter
+
+# --engine auto crossover: below this fleet size the per-event engine wins
+# (no vmap padding / bucketing overhead on tiny fleets — see the committed
+# artifacts/bench/table_megafleet.json sweep: legacy 3.1 vs batched 3.9
+# wall_per_sim_s at 100 clients, batched/window ~11x faster from 1k up)
+AUTO_ENGINE_THRESHOLD = 300
+
+
+def resolve_engine(engine: str, fleet) -> str:
+    """Map --engine auto to a concrete engine from the fleet size."""
+    if engine != "auto":
+        return engine
+    if isinstance(fleet, CohortFleet) or len(fleet) >= AUTO_ENGINE_THRESHOLD:
+        return "window"
+    return "legacy"
 
 
 def _staleness_exp(v: str):
@@ -123,16 +139,28 @@ def main():
                          "--spot-preempt-prob draw)")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="async: commit every K buffered updates")
-    ap.add_argument("--engine", default="legacy",
-                    choices=["legacy", "batched"],
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "legacy", "batched", "window"],
                     help="async event engine: 'legacy' processes one event "
                          "at a time; 'batched' defers client training into "
-                         "vmap chunks and batches dispatch (bit-identical "
-                         "trajectories — tests/test_megafleet_equivalence.py "
-                         "— but far fewer device round-trips)")
+                         "vmap chunks and batches dispatch; 'window' "
+                         "additionally blocks every RNG/key draw per commit "
+                         "window, keeps pending arrivals in numpy structured "
+                         "arrays and performs ONE host sync per window.  All "
+                         "three are bit-identical on flat fleets "
+                         "(tests/test_megafleet_equivalence.py).  'auto' "
+                         "(default) picks by fleet size: per-event dispatch "
+                         "is faster below ~%d clients, the window engine "
+                         "above (crossover measured in artifacts/bench/"
+                         "table_megafleet.json: legacy 3.1 vs batched 3.9 "
+                         "wall_per_sim_s at 100 clients, 11x the other way "
+                         "at 1k+)" % AUTO_ENGINE_THRESHOLD)
     ap.add_argument("--train-chunk", type=int, default=32,
-                    help="batched engine: max vmap lanes per deferred "
-                         "training chunk")
+                    help="batched/window engines: max vmap lanes per "
+                         "deferred training chunk")
+    ap.add_argument("--event-window", type=int, default=256,
+                    help="window engine: events per blocked RNG/key draw "
+                         "(and per scheduler GC window)")
     ap.add_argument("--commit-chunk", type=int, default=0,
                     help="async: accumulate the commit buffer this many "
                          "slots at a time instead of stacking all K (0 = "
@@ -362,10 +390,17 @@ def main():
                   "discounting replaces them)")
         mgr = (AsyncCheckpointManager(args.checkpoint_dir)
                if args.checkpoint_dir else None)
-        orch_cls = (BatchedAsyncOrchestrator if args.engine == "batched"
-                    else AsyncOrchestrator)
-        engine_kw = ({"train_chunk": args.train_chunk}
-                     if args.engine == "batched" else {})
+        engine = resolve_engine(args.engine, fleet)
+        if args.engine == "auto":
+            print(f"--engine auto: {len(fleet)} clients -> {engine} "
+                  f"(crossover {AUTO_ENGINE_THRESHOLD})")
+        orch_cls = {"legacy": AsyncOrchestrator,
+                    "batched": BatchedAsyncOrchestrator,
+                    "window": EventWindowOrchestrator}[engine]
+        engine_kw = ({} if engine == "legacy"
+                     else {"train_chunk": args.train_chunk})
+        if engine == "window":
+            engine_kw["window"] = args.event_window
         orch = orch_cls(
             fleet=fleet, fed_data=fed, loss_fn=model.loss_fn, fl=fl,
             async_cfg=AsyncConfig(buffer_size=args.buffer_k,
@@ -390,7 +425,7 @@ def main():
                              verbose=True)
         summary = {
             "dataset": args.dataset, "algo": args.algo, "mode": "async",
-            "exec_backend": args.exec_backend, "engine": args.engine,
+            "exec_backend": args.exec_backend, "engine": engine,
             "secure_agg": args.secure_agg,
             "mask_overhead_bytes": sum(l.mask_overhead_bytes
                                        for l in orch.logs),

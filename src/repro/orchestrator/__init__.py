@@ -11,3 +11,6 @@ from repro.orchestrator.hierarchy import (  # noqa: F401
 from repro.orchestrator.megafleet import (  # noqa: F401
     BatchedAsyncOrchestrator, CohortFleet, CohortSpec, make_mega_fleet,
 )
+from repro.orchestrator.eventwindow import (  # noqa: F401
+    BlockedGenerator, EventWindowOrchestrator, PendingStore,
+)

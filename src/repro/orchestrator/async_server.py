@@ -20,7 +20,9 @@ exactly as in the sync orchestrator (down at dispatch, up at arrival).
 from __future__ import annotations
 
 import heapq
+from contextlib import contextmanager
 from dataclasses import dataclass, field
+from time import perf_counter
 from typing import Callable, Optional
 
 import jax
@@ -93,6 +95,13 @@ class CommitLog:
     #                                  # "fault:policy" decisions the adaptive
     #                                    recovery policy took since the
     #                                    previous commit
+    phase_wall: dict = field(default_factory=dict)
+    #                                  # host wall-clock seconds spent per
+    #                                    engine phase (dispatch/train/commit/
+    #                                    host_sync) plus the host-sync count
+    #                                    since the previous commit.  Profiling
+    #                                    only — excluded from every trajectory
+    #                                    equivalence comparison.
 
 
 @dataclass
@@ -173,6 +182,13 @@ class AsyncOrchestrator:
         self._inflight: set[int] = set()   # cids currently training
         self._buffer: list[tuple] = []     # [(PendingUpdate, arrival_time)]
         self._buffer_bytes = 0
+        # array mirror of the buffered arrival times: the timeout-flush hot
+        # path tests its head in O(1) instead of scanning the buffer
+        self._buffer_t = np.empty(0)
+        # per-phase host wall-clock accounting, flushed into each CommitLog
+        self._phase = {"dispatch": 0.0, "train": 0.0, "commit": 0.0,
+                       "host_sync": 0.0}
+        self._host_syncs = 0
         # processed-event trace: (t, seq, cid, failed, fault) per heap pop —
         # what the resume-equivalence tests pin event ordering against
         self.events_processed: list[tuple] = []
@@ -199,6 +215,49 @@ class AsyncOrchestrator:
             self._pb = (down, up)
         return self._pb
 
+    # --------------------------------------------------------- phase timers
+    @contextmanager
+    def _timed(self, phase: str):
+        """Attribute elapsed host wall-clock to ``phase``.  Nested phases
+        (a host_sync inside train, train inside dispatch) book their own
+        time; the outer phase gets elapsed minus whatever inner phases
+        accrued, so the four counters partition the wall clock."""
+        snap = dict(self._phase)
+        t0 = perf_counter()
+        try:
+            yield
+        finally:
+            inner = sum(self._phase[k] - snap[k] for k in snap)
+            self._phase[phase] += perf_counter() - t0 - inner
+
+    def _host_fetch(self, x):
+        """Device->host transfer, counted and billed to the host_sync phase.
+        Every engine sync point routes through here so the per-commit
+        ``phase_wall['host_syncs']`` counter is trustworthy."""
+        with self._timed("host_sync"):
+            self._host_syncs += 1
+            return jax.device_get(x)
+
+    # ---------------------------------------------------- engine extension
+    # The event-window engine (orchestrator.eventwindow) substitutes the
+    # structures behind these four seams; the per-event baseline keeps the
+    # plain heapq / sequential jax.random.split semantics they wrap.
+    def _next_key(self):
+        """Advance the jax key chain one split; return the subkey."""
+        self.jrng, r = jax.random.split(self.jrng)
+        return r
+
+    def _push_event(self, t: float, seq: int, upd: PendingUpdate):
+        heapq.heappush(self._events, (t, seq, upd))
+
+    def _pop_event(self):
+        return heapq.heappop(self._events)
+
+    def _abandon_update(self, upd: PendingUpdate):
+        """``upd`` will never be committed (dropped as stale, or lost to an
+        unrecovered fault): engines that defer work for it may cancel the
+        pending job.  No-op in the eager per-event engine."""
+
     # ------------------------------------------------------------- dispatch
     def _train_client(self, upd: PendingUpdate, client, params):
         """Run the client's local training against the given params snapshot."""
@@ -206,10 +265,11 @@ class AsyncOrchestrator:
                                              self.fl.local_steps,
                                              self.batch_size)
         batches = jax.tree.map(lambda x: jnp.asarray(x[0]), batches)
-        self.jrng, r = jax.random.split(self.jrng)
-        delta, loss = self._client_update(params, batches, r)
-        upd.delta = delta
-        upd.loss = float(loss)
+        r = self._next_key()
+        with self._timed("train"):
+            delta, loss = self._client_update(params, batches, r)
+            upd.delta = delta
+            upd.loss = float(self._host_fetch(loss))
         upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
 
     def _pick_client(self, rnd: int):
@@ -242,12 +302,13 @@ class AsyncOrchestrator:
 
     def _dispatch_one(self, params, now: float):
         """Hand the current params to one idle client; schedule its arrival."""
-        picked = self._pick_client(self._seq)
-        if picked is None:
-            return False
-        client_idx, client = picked
-        ex = self._execute_attempt(client, params, now)
-        self._finish_dispatch(client_idx, client, ex, params, now)
+        with self._timed("dispatch"):
+            picked = self._pick_client(self._seq)
+            if picked is None:
+                return False
+            client_idx, client = picked
+            ex = self._execute_attempt(client, params, now)
+            self._finish_dispatch(client_idx, client, ex, params, now)
         return True
 
     def _finish_dispatch(self, client_idx, client, ex, params, now: float):
@@ -288,7 +349,7 @@ class AsyncOrchestrator:
         link = link_for_site(ex.site or client.site)
         self.comm.log(self.version, client.cid, "down", down_bytes, link)
         self._inflight.add(client.cid)
-        heapq.heappush(self._events, (arrival, self._seq, upd))
+        self._push_event(arrival, self._seq, upd)
         self._seq += 1
 
     def _top_up(self, params):
@@ -371,9 +432,8 @@ class AsyncOrchestrator:
             upd.failed, upd.fault = True, fault
             if policy == "resume":
                 upd.steps_done += int(frac * (L - upd.steps_done))
-            heapq.heappush(self._events,
-                           (start + ex.queue_wait_s + frac * ex.full_run_s,
-                            upd.seq, upd))
+            self._push_event(start + ex.queue_wait_s + frac * ex.full_run_s,
+                             upd.seq, upd)
         elif ex.preempted:
             # the scheduler reclaimed the RETRY's spot instance too
             upd.failed, upd.fault = True, "preempt"
@@ -381,12 +441,10 @@ class AsyncOrchestrator:
                 upd.steps_done += int(ex.frac_done * (L - upd.steps_done))
             else:
                 upd.steps_done = int(ex.frac_done * L)
-            heapq.heappush(self._events,
-                           (start + ex.duration_s, upd.seq, upd))
+            self._push_event(start + ex.duration_s, upd.seq, upd)
         else:
             upd.failed, upd.fault = False, ""
-            heapq.heappush(self._events,
-                           (start + ex.duration_s, upd.seq, upd))
+            self._push_event(start + ex.duration_s, upd.seq, upd)
         return True
 
     # --------------------------------------------------------------- commit
@@ -423,6 +481,21 @@ class AsyncOrchestrator:
         checkpoint serializer.  No-op in the per-event engine (deltas are
         computed eagerly at dispatch)."""
 
+    def _materialize_for_commit(self):
+        """Materialize ONLY what the imminent commit reads.  The baseline
+        delegates to the full hook; the event-window engine narrows it to
+        the buffered updates so off-buffer jobs stay queued on-device."""
+        self._materialize()
+
+    def _commit_host_fetch(self, metrics, ups):
+        """The ONE host-sync point of a commit: fetch the commit's
+        delta_norm plus the per-update losses the CommitLog needs.
+        Returns (delta_norm: float, losses: list[float]).  The baseline
+        losses are already host floats; the event-window engine overrides
+        this to bundle its deferred loss buckets into the same fetch."""
+        return (float(self._host_fetch(metrics["delta_norm"])),
+                [float(u.loss) for u in ups])
+
     def engine_state(self) -> dict:
         """Engine-private checkpoint payload (beyond the shared serializer's
         fields).  The per-event engine has none."""
@@ -431,7 +504,9 @@ class AsyncOrchestrator:
     def _after_restore(self):
         """Called by the checkpoint loader after all shared state is in
         place, so engines can rebuild derived structures (cohort counters,
-        deferred-job caches).  No-op in the per-event engine."""
+        deferred-job caches).  The baseline rebuilds the buffered-arrival
+        mirror the timeout flush reads."""
+        self._buffer_t = np.asarray([a for _, a in self._buffer], np.float64)
 
     def _commit_chunked(self, params, server_state, ups, stal, alpha, r):
         """Accumulate the buffer C slots at a time: one device call per
@@ -462,10 +537,12 @@ class AsyncOrchestrator:
 
     def _do_commit(self, params, server_state, at_time: float,
                    timeout: bool = False):
-        self._materialize()
+        t0 = perf_counter()
+        snap = dict(self._phase)
+        self._materialize_for_commit()
         ups = [u for u, _ in self._buffer]
         stal = [self.version - u.dispatch_version for u in ups]
-        self.jrng, r = jax.random.split(self.jrng)
+        r = self._next_key()
         alpha = self._alpha
         if self._chunk_steps is not None:
             params, server_state, metrics = self._commit_chunked(
@@ -479,13 +556,13 @@ class AsyncOrchestrator:
         self.version += 1
         self.fault_injector.step_round()
         self.updates_applied += len(ups)
-        delta_norm = float(metrics["delta_norm"])
+        delta_norm, up_losses = self._commit_host_fetch(metrics, ups)
         if self._staleness_ctrl is not None:
             # feed the controller AFTER the commit: alpha moves for the next
             # one, deterministically from observed staleness + norm drift
             self._alpha = self._staleness_ctrl.update(stal, delta_norm)
         down_b, up_b = self._payload_bytes_cache(params)
-        losses = [u.loss for u in ups if np.isfinite(u.loss)]
+        losses = [l for l in up_losses if np.isfinite(l)]
         rec = [u.recovery_s for u in ups if u.retries]
         log = CommitLog(
             commit=self.version, sim_time=at_time, n_updates=len(ups),
@@ -507,10 +584,19 @@ class AsyncOrchestrator:
             recovery_actions=self._recovery_actions)
         self._recovery_actions = []
         if self.eval_fn and (self.version % self.eval_every == 0):
-            log.eval_metric = float(self.eval_fn(params))
+            log.eval_metric = float(self._host_fetch(self.eval_fn(params)))
         self.logs.append(log)
         self._buffer = []
         self._buffer_bytes = 0
+        self._buffer_t = np.empty(0)
+        # everything since the previous commit not booked to an inner phase
+        # is commit work; flush the window's phase accounting into the log
+        inner = sum(self._phase[k] - snap[k] for k in snap)
+        self._phase["commit"] += perf_counter() - t0 - inner
+        log.phase_wall = {k: round(v, 6) for k, v in self._phase.items()}
+        log.phase_wall["host_syncs"] = self._host_syncs
+        self._phase = {k: 0.0 for k in self._phase}
+        self._host_syncs = 0
         return params, server_state
 
     def _flush_timeouts(self, params, server_state, now: float):
@@ -522,11 +608,16 @@ class AsyncOrchestrator:
         update arrived no later than the previous event pop, so all of them
         predate the deadline."""
         T = self.async_cfg.commit_timeout_s
-        if not T:
+        # O(1) hot-path guard: the head of the array-backed arrival mirror
+        # is the oldest buffered arrival (the buffer is append-ordered by
+        # event time), so one comparison rules the common case out
+        if (not T or self._buffer_t.size == 0
+                or self._buffer_t[0] + T > now):
             return params, server_state
-        while self._buffer and self._buffer[0][1] + T <= now:
+        while self._buffer_t.size and self._buffer_t[0] + T <= now:
             params, server_state = self._do_commit(
-                params, server_state, self._buffer[0][1] + T, timeout=True)
+                params, server_state, float(self._buffer_t[0] + T),
+                timeout=True)
         return params, server_state
 
     # ------------------------------------------------------------------ run
@@ -547,7 +638,7 @@ class AsyncOrchestrator:
 
         last_ckpt = self.version
         while self._events and self.version < num_commits:
-            t, seq, upd = heapq.heappop(self._events)
+            t, seq, upd = self._pop_event()
             if max_sim_time and t > max_sim_time:
                 # budget exhausted before this arrival: flush any timeout
                 # deadlines that fall inside the budget, put the event back
@@ -555,12 +646,12 @@ class AsyncOrchestrator:
                 # clock to the budget actually simulated
                 params, server_state = self._flush_timeouts(
                     params, server_state, max_sim_time)
-                heapq.heappush(self._events, (t, seq, upd))
+                self._push_event(t, seq, upd)
                 self.clock = max_sim_time
                 break
             params, server_state = self._flush_timeouts(params, server_state, t)
             if self.version >= num_commits:
-                heapq.heappush(self._events, (t, seq, upd))
+                self._push_event(t, seq, upd)
                 break
             self.clock = max(self.clock, t)
             client = self.fleet[upd.client_idx]
@@ -570,6 +661,7 @@ class AsyncOrchestrator:
                 if self._handle_fault_arrival(upd, t, params):
                     continue            # slot stays busy with the retry
                 self.lost_to_faults += 1
+                self._abandon_update(upd)
                 self._inflight.discard(upd.cid)
                 # history in dispatch-counter units, matching select()'s view
                 client.record(False, t - upd.dispatch_time, self._seq)
@@ -592,9 +684,11 @@ class AsyncOrchestrator:
                 staleness = self.version - upd.dispatch_version
                 if staleness > self.async_cfg.max_staleness:
                     self.dropped_stale += 1
+                    self._abandon_update(upd)
                 else:
                     self._buffer.append((upd, t))
                     self._buffer_bytes += up_bytes
+                    self._buffer_t = np.append(self._buffer_t, t)
             if len(self._buffer) >= self.async_cfg.buffer_size:
                 params, server_state = self._do_commit(params, server_state, t)
                 if verbose and self.logs:

@@ -1,0 +1,366 @@
+"""Vectorized event-window engine: one host sync per commit window.
+
+``BatchedAsyncOrchestrator`` (PR 6) removed the per-event device round
+trip from *training* — but the coordinator still pays, per commit window:
+one Python-level ``jax.random.split`` device call per dispatch, one host
+loss fetch per vmap bucket, one scalar RNG draw per work-time/fault dice,
+and O(pending) heap churn over ``PendingUpdate`` objects.  Profiling at
+100k clients shows exactly those costs standing between 100k and 1e6
+simulated clients.  This engine removes them without changing a single
+draw or event:
+
+  * ``BlockedGenerator`` — wraps the orchestrator's and the fault
+    injector's ``numpy.random.Generator`` so scalar draws are served from
+    pre-drawn homogeneous blocks (one vectorized RNG call per window
+    instead of one Python-level call per event).  numpy draws a block of
+    n with the same values AND the same end state as n sequential scalar
+    calls, and a partially-consumed block is re-synced by rewinding the
+    bit generator and replaying exactly the consumed prefix — so every
+    consumer (checkpoint state capture included) sees the sequential
+    stream bit-for-bit (pinned by tests/test_eventwindow.py).
+  * ``_KeyBlock`` — the jax key chain is advanced by a jitted
+    ``lax.scan`` of sequential splits: one device call + one host fetch
+    per ``window`` keys, values bit-identical to per-event splits.
+  * ``PendingStore`` — pending arrivals live in a numpy structured array
+    (arrival time, seq, client id, params version at dispatch, fault
+    kind) with a (t, seq) index heap; ``PendingUpdate`` payloads are
+    reached through a seq-keyed side table only when an event actually
+    pops.  Iteration yields legacy (t, seq, upd) tuples, so the
+    checkpoint serializer and the restore path work unchanged.
+  * deferred loss fetch — vmap buckets keep their losses ON DEVICE
+    (stacking device scalars into the commit step is transfer-free); the
+    commit bundles delta_norm + every deferred loss bucket into ONE
+    ``jax.device_get``.  Commits materialize only the *buffered* seqs;
+    off-buffer jobs stay queued.
+  * window-batched backend draws — ``ExecutionBackend.begin_window``
+    reserves a window-sized RNG block for work-time draws and lets the
+    scheduler backend amortize its terminal-job GC across the window.
+
+Bit-identity with the legacy per-event engine on flat fleets — across
+secure-agg, faults x recovery policies, the scheduler backend, chunked
+commits, and cross-engine kill/--resume — is locked by
+tests/test_megafleet_equivalence.py.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orchestrator.megafleet import BatchedAsyncOrchestrator
+
+
+# ------------------------------------------------------------- rng blocks
+class BlockedGenerator:
+    """Serve scalar draws from pre-drawn homogeneous blocks, bit-identical
+    to the sequential ``numpy.random.Generator`` stream.
+
+    Exactness contract (pinned by tests/test_eventwindow.py):
+
+    * for ``random``/``uniform``/``lognormal``, numpy's block draw of n
+      values equals n sequential scalar calls elementwise AND leaves the
+      bit generator in the same end state;
+    * a partially consumed block is ``_sync``'d by rewinding to the
+      pre-block state and replaying exactly the consumed prefix, which
+      recovers the sequential state bit-for-bit;
+    * any other method (``choice``, ``integers``, ...) and any
+      ``bit_generator`` access syncs first, so state-dependent draws and
+      checkpoint save/restore see the exact sequential generator.
+    """
+
+    def __init__(self, gen: np.random.Generator, window: int = 256):
+        self._gen = gen
+        self._window = int(window)
+        self._pending = 0            # reserve() hint for the next refill
+        self._kind = None            # (name, *args) of the live block
+        self._block = None
+        self._i = 0
+        self._state0 = None          # bit generator state before the block
+
+    def reserve(self, n: int):
+        """Size hint: at least ``n`` same-kind draws are coming; make the
+        next refill big enough to serve them from one vectorized call."""
+        self._pending = max(self._pending, int(n))
+
+    def _raw(self, kind, size):
+        name, args = kind[0], kind[1:]
+        return getattr(self._gen, name)(*args, size=size)
+
+    def _sync(self):
+        """Return the wrapped generator to the exact sequential state."""
+        if self._kind is None:
+            return
+        if self._i < len(self._block):
+            self._gen.bit_generator.state = self._state0
+            if self._i:
+                self._raw(self._kind, self._i)
+        self._kind = self._block = self._state0 = None
+        self._i = 0
+
+    def _refill(self, kind, n: int):
+        self._sync()
+        self._kind = kind
+        self._state0 = self._gen.bit_generator.state
+        size = max(self._window, self._pending, n)
+        self._pending = 0
+        self._block = self._raw(kind, size)
+        self._i = 0
+
+    def _serve(self, kind, size):
+        if size is None:
+            if self._kind != kind or self._i >= len(self._block):
+                self._refill(kind, 1)
+            v = self._block[self._i]
+            self._i += 1
+            return float(v)
+        n = int(size)
+        if self._kind != kind or self._i + n > len(self._block):
+            self._refill(kind, n)
+        out = self._block[self._i:self._i + n].copy()
+        self._i += n
+        return out
+
+    def random(self, size=None):
+        return self._serve(("random",), size)
+
+    def uniform(self, low=0.0, high=1.0, size=None):
+        return self._serve(("uniform", float(low), float(high)), size)
+
+    def lognormal(self, mean=0.0, sigma=1.0, size=None):
+        return self._serve(("lognormal", float(mean), float(sigma)), size)
+
+    @property
+    def bit_generator(self):
+        # checkpoint capture/restore path: hand out the REAL bit generator,
+        # sequential-exact (assignment through this property lands on it)
+        self._sync()
+        return self._gen.bit_generator
+
+    def __getattr__(self, name):
+        # non-blocked draws (choice, integers, normal, ...) go to the real
+        # generator after an exact sync.  Only called for names not found
+        # on the wrapper itself.
+        gen = object.__getattribute__(self, "_gen")
+        self._sync()
+        return getattr(gen, name)
+
+
+class _KeyBlock:
+    """Amortized jax key chain: a jitted ``lax.scan`` of sequential
+    ``jax.random.split`` calls yields ``window`` (chain, subkey) pairs in
+    one device call + one host fetch, bit-identical to per-event splits
+    (pinned by tests/test_eventwindow.py)."""
+
+    def __init__(self, window: int = 256):
+        self._window = int(window)
+        self._chain = None           # [W, 2] uint32 chain states
+        self._subs = None            # [W, 2] uint32 subkeys
+        self._i = 0
+
+        def _run(key):
+            def step(c, _):
+                nk = jax.random.split(c)
+                return nk[0], (nk[0], nk[1])
+            _, out = jax.lax.scan(step, key, None, length=self._window)
+            return out
+
+        self._scan = jax.jit(_run)
+
+    def next(self, jrng, fetch=jax.device_get):
+        """(subkey, new_chain_value) for one split of ``jrng``.  ``fetch``
+        is the host-transfer hook (the orchestrator passes ``_host_fetch``
+        so refills are billed as host syncs)."""
+        if self._chain is None or self._i >= len(self._chain):
+            key = jnp.asarray(np.asarray(jrng, np.uint32))
+            self._chain, self._subs = fetch(self._scan(key))
+            self._i = 0
+        r, new = self._subs[self._i], self._chain[self._i]
+        self._i += 1
+        return r, new
+
+    def reset(self):
+        """Drop the precomputed chain (the chain value changed under us —
+        checkpoint restore)."""
+        self._chain = self._subs = None
+        self._i = 0
+
+
+# ----------------------------------------------------------- event store
+_FAULT_CODES = {"": 0, "dropout": 1, "preempt": 2, "partition": 3}
+
+
+class PendingStore:
+    """Array-backed pending-arrival store, drop-in for the legacy heap of
+    (arrival_time, seq, PendingUpdate) tuples.
+
+    The hot metadata — arrival time, seq, client id, params version at
+    dispatch, fault kind — lives in a numpy structured array; ordering is
+    a (t, seq) index heap (floats + ints only, no object comparisons);
+    the ``PendingUpdate`` payloads live in a seq-keyed dict touched only
+    when an event pops.  Iteration yields legacy (t, seq, upd) tuples so
+    the checkpoint serializer — and the loader, which heapifies a plain
+    tuple list that ``_after_restore`` converts back — work unchanged."""
+
+    DTYPE = np.dtype([("t", np.float64), ("seq", np.int64),
+                      ("cid", np.int64), ("version", np.int64),
+                      ("fault", np.int8)])
+
+    def __init__(self, events=()):
+        self._heap: list[tuple] = []
+        self._rows = np.zeros(64, self.DTYPE)
+        self._n = 0                          # rows used (incl. dead rows)
+        self._upd: dict[int, object] = {}    # seq -> PendingUpdate
+        self._row: dict[int, int] = {}       # seq -> row index
+        for t, seq, upd in events:
+            self.push(t, seq, upd)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __iter__(self):
+        for t, seq in self._heap:
+            yield t, seq, self._upd[seq]
+
+    def push(self, t: float, seq: int, upd):
+        if self._n == len(self._rows):
+            self._compact_or_grow()
+        self._rows[self._n] = (t, seq, upd.cid, upd.dispatch_version,
+                               _FAULT_CODES.get(upd.fault, 0))
+        self._row[seq] = self._n
+        self._n += 1
+        self._upd[seq] = upd
+        heapq.heappush(self._heap, (t, seq))
+
+    def pop(self):
+        t, seq = heapq.heappop(self._heap)
+        del self._row[seq]                   # row goes dead; compacted lazily
+        return t, seq, self._upd.pop(seq)
+
+    def min_time(self):
+        return self._heap[0][0] if self._heap else None
+
+    @property
+    def live(self) -> np.ndarray:
+        """Structured rows of the live pending arrivals, in push order."""
+        idx = np.sort(np.fromiter(self._row.values(), np.int64,
+                                  len(self._row)))
+        return self._rows[idx]
+
+    def staleness(self, version: int) -> np.ndarray:
+        """Commits elapsed since each pending arrival's dispatch — one
+        vectorized subtract over the structured rows."""
+        return np.int64(version) - self.live["version"]
+
+    def _compact_or_grow(self):
+        if len(self._row) <= len(self._rows) // 2:
+            # >= half the rows are dead (popped): compact in place
+            idx = np.sort(np.fromiter(self._row.values(), np.int64,
+                                      len(self._row)))
+            rows = self._rows[idx]
+            self._rows[:len(rows)] = rows
+            self._n = len(rows)
+            self._row = {int(r["seq"]): i for i, r in enumerate(rows)}
+        else:
+            self._rows = np.concatenate(
+                [self._rows, np.zeros(len(self._rows), self.DTYPE)])
+
+
+# ----------------------------------------------------------------- engine
+@dataclass
+class EventWindowOrchestrator(BatchedAsyncOrchestrator):
+    """Drop-in ``BatchedAsyncOrchestrator`` that processes events against
+    window-blocked RNG streams, an array-backed pending store, an
+    amortized key chain, and ONE bundled host sync per commit window.
+    Bit-identical to both other engines on flat fleets; on cohort fleets
+    it matches the batched engine's (deterministic, resume-exact)
+    trajectory."""
+
+    window: int = 256              # events per RNG/key/backend block
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        # wrap the two scalar-draw streams the event loop consumes; the
+        # backend holds a ref to the orchestrator rng, so re-bind it
+        self.rng = BlockedGenerator(self.rng, self.window)
+        self.backend.bind(self.rng, self.straggler)
+        self.fault_injector.rng = BlockedGenerator(
+            self.fault_injector.rng, self.window)
+        self._keys = _KeyBlock(self.window)
+        self._deferred = []        # [(device losses [L], bucket job list)]
+        self._events = PendingStore()
+        self.backend.begin_window(self.window)
+
+    # ------------------------------------------------------- engine seams
+    def _next_key(self):
+        r, self.jrng = self._keys.next(self.jrng, self._host_fetch)
+        return r
+
+    def _push_event(self, t, seq, upd):
+        self._events.push(t, seq, upd)
+
+    def _pop_event(self):
+        return self._events.pop()
+
+    # --------------------------------------------------- deferred fetches
+    def _finish_chunk(self, jobs, deltas, losses):
+        # keep the bucket's losses ON DEVICE: stacking device scalars into
+        # the commit step is transfer-free, so the only reader that needs
+        # host floats is the CommitLog — served by the commit's bundled
+        # fetch (or _flush_deferred for full materializes)
+        for i, job in enumerate(jobs):
+            job.upd.delta = jax.tree.map(lambda d: d[i], deltas)
+            job.upd.loss = losses[i]
+        self._deferred.append((losses, list(jobs)))
+
+    def _assign_losses(self, buckets):
+        for lv, (_, jobs) in zip(buckets, self._deferred):
+            lv = np.asarray(lv)
+            for i, job in enumerate(jobs):
+                job.upd.loss = float(lv[i])
+        self._deferred = []
+
+    def _flush_deferred(self):
+        if self._deferred:
+            self._assign_losses(
+                self._host_fetch([b for b, _ in self._deferred]))
+
+    def _materialize(self, seqs=None):
+        super()._materialize(seqs)
+        if seqs is None:
+            # full materialize (checkpoint serializer): losses must become
+            # host floats for the snapshot
+            self._flush_deferred()
+
+    def _materialize_for_commit(self):
+        # train only what this commit reads; off-buffer jobs stay queued
+        self._materialize({u.seq for u, _ in self._buffer})
+
+    def _commit_host_fetch(self, metrics, ups):
+        # THE one host sync of the commit window: delta_norm + every
+        # deferred loss bucket in a single device_get
+        vals = self._host_fetch({"dn": metrics["delta_norm"],
+                                 "lv": [b for b, _ in self._deferred]})
+        self._assign_losses(vals["lv"])
+        return float(vals["dn"]), [float(u.loss) for u in ups]
+
+    def _do_commit(self, params, server_state, at_time, timeout=False):
+        out = super()._do_commit(params, server_state, at_time, timeout)
+        # a fresh window begins: reserve the next RNG/GC blocks
+        self.backend.begin_window(self.window)
+        return out
+
+    # ------------------------------------------------ checkpointable state
+    def _after_restore(self):
+        # the loader assigned a plain heapified tuple list to _events and
+        # rewrote jrng under the key block; deferred buckets were flushed
+        # by the pre-save materialize
+        super()._after_restore()
+        self._events = PendingStore(self._events)
+        self._keys.reset()
+        self._deferred = []
+        self.backend.begin_window(self.window)

@@ -210,25 +210,31 @@ class BatchedAsyncOrchestrator(AsyncOrchestrator):
                                              self.fl.local_steps,
                                              self.batch_size)
         batches = jax.tree.map(lambda x: np.asarray(x[0]), batches)
-        self.jrng, r = jax.random.split(self.jrng)
+        r = self._next_key()
         upd.weight = float(max(self.fed_data.client_size(client.cid), 1))
         # a restart retry re-enters here with the same seq: the stale job is
         # simply replaced (the eager engine wasted that training up front)
         self._jobs[upd.seq] = _TrainJob(upd, params, batches, r)
 
-    def _materialize(self):
-        if not self._jobs:
+    def _materialize(self, seqs=None):
+        """Materialize deferred jobs — all of them, or (``seqs`` given) only
+        that subset, leaving the rest queued for a later call."""
+        pending = (sorted(self._jobs) if seqs is None
+                   else sorted(s for s in self._jobs if s in seqs))
+        if not pending:
             return
         # group by params snapshot (dispatch version), preserving seq order
         # within each group; chunk each group into vmap buckets
-        groups: dict[int, list[_TrainJob]] = {}
-        for seq in sorted(self._jobs):
-            job = self._jobs[seq]
-            groups.setdefault(id(job.params), []).append(job)
-        for jobs in groups.values():
-            for lo in range(0, len(jobs), self.train_chunk):
-                self._run_chunk(jobs[lo:lo + self.train_chunk])
-        self._jobs.clear()
+        with self._timed("train"):
+            groups: dict[int, list[_TrainJob]] = {}
+            for seq in pending:
+                job = self._jobs[seq]
+                groups.setdefault(id(job.params), []).append(job)
+            for jobs in groups.values():
+                for lo in range(0, len(jobs), self.train_chunk):
+                    self._run_chunk(jobs[lo:lo + self.train_chunk])
+        for seq in pending:
+            del self._jobs[seq]
 
     def _run_chunk(self, jobs: list[_TrainJob]):
         """vmap one bucket of same-snapshot jobs; one host sync (the loss
@@ -247,7 +253,13 @@ class BatchedAsyncOrchestrator(AsyncOrchestrator):
                                *[jobs[i].batches for i in pick])
         keys = jnp.stack([jobs[i].key for i in pick])
         deltas, losses = step(jobs[0].params, batches, keys)
-        lv = np.asarray(losses)                     # ONE sync per bucket
+        self._finish_chunk(jobs, deltas, losses)
+
+    def _finish_chunk(self, jobs, deltas, losses):
+        """Assign a bucket's results back to its updates.  ONE host sync
+        (the loss fetch) per bucket; the event-window engine overrides this
+        to defer even that to the commit's bundled fetch."""
+        lv = np.asarray(self._host_fetch(losses))
         for i, job in enumerate(jobs):
             job.upd.delta = jax.tree.map(lambda d: d[i], deltas)
             job.upd.loss = float(lv[i])
@@ -259,24 +271,26 @@ class BatchedAsyncOrchestrator(AsyncOrchestrator):
             # the per-dispatch path is already cheap, and the shared-draw
             # cache must interleave exactly as in steady-state dispatch
             return super()._top_up(params)
-        target = min(self.async_cfg.max_concurrency, len(self.fleet))
-        picks = []
-        for _ in range(max(0, target - len(self._inflight))):
-            picked = self._pick_client(self._seq + len(picks))
-            if picked is None:
-                break
-            # claim the slot now so the next pick's availability view
-            # matches the sequential engine's
-            self._inflight.add(picked[1].cid)
-            picks.append(picked)
-        if not picks:
-            return
-        up_bytes = self._payload_bytes_cache(params)[1]
-        exs = self.backend.execute_batch(
-            [c for _, c in picks], self.flops_per_client_round, up_bytes,
-            self.clock)
-        for (client_idx, client), ex in zip(picks, exs):
-            self._finish_dispatch(client_idx, client, ex, params, self.clock)
+        with self._timed("dispatch"):
+            target = min(self.async_cfg.max_concurrency, len(self.fleet))
+            picks = []
+            for _ in range(max(0, target - len(self._inflight))):
+                picked = self._pick_client(self._seq + len(picks))
+                if picked is None:
+                    break
+                # claim the slot now so the next pick's availability view
+                # matches the sequential engine's
+                self._inflight.add(picked[1].cid)
+                picks.append(picked)
+            if not picks:
+                return
+            up_bytes = self._payload_bytes_cache(params)[1]
+            exs = self.backend.execute_batch(
+                [c for _, c in picks], self.flops_per_client_round, up_bytes,
+                self.clock)
+            for (client_idx, client), ex in zip(picks, exs):
+                self._finish_dispatch(client_idx, client, ex, params,
+                                      self.clock)
 
     # ----------------------------------------------------- cohort dispatch
     def _cohort_draw(self, client) -> dict:
@@ -355,9 +369,17 @@ class BatchedAsyncOrchestrator(AsyncOrchestrator):
                      "left": int(e["left"])}
             for j, e in s.get("cohort_draws", {}).items()}
 
+    def _abandon_update(self, upd):
+        # the update's delta will never be read: cancel its deferred job
+        # instead of training it at the next materialize (the eager engine
+        # wasted that training up front; committed results are unaffected
+        # because every vmap lane is exact regardless of bucket makeup)
+        self._jobs.pop(upd.seq, None)
+
     def _after_restore(self):
         # restored deltas are eager; cohort draw blocks were already loaded
         # by load_engine_state (or stay empty on a flat-fleet snapshot)
+        super()._after_restore()
         self._jobs.clear()
         if self._cohort_mode:
             infl = _CohortInflight(self.fleet)

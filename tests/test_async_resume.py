@@ -64,8 +64,9 @@ def make_orch(buffer_size=3, commit_timeout=0.0, faults=None, mgr=None,
 
 
 def _norm(d):
+    # phase_wall is host-side profiling: never trajectory-comparable
     return {k: ("nan" if isinstance(v, float) and math.isnan(v) else v)
-            for k, v in d.items()}
+            for k, v in d.items() if k != "phase_wall"}
 
 
 def _trajectory(orch):

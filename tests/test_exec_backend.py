@@ -196,8 +196,9 @@ def async_orch(backend, seed=SEED, faults=None, mgr=None,
 
 def _trajectory(orch):
     def norm(d):
+        # phase_wall is host-side profiling: never trajectory-comparable
         return {k: ("nan" if isinstance(v, float) and math.isnan(v) else v)
-                for k, v in d.items()}
+                for k, v in d.items() if k != "phase_wall"}
     return ([norm(asdict(l)) for l in orch.logs],
             list(orch.events_processed),
             [asdict(r) for r in orch.comm.records])

@@ -94,7 +94,8 @@ def _hier(n_fac=2, local_mode="sync", inter_mode="sync", local_rounds=2,
 
 def _norm(o):
     if isinstance(o, dict):
-        return {k: _norm(v) for k, v in o.items()}
+        # phase_wall is host-side profiling: never trajectory-comparable
+        return {k: _norm(v) for k, v in o.items() if k != "phase_wall"}
     if isinstance(o, (list, tuple)):
         return [_norm(x) for x in o]
     if isinstance(o, np.integer):

@@ -1,14 +1,18 @@
-"""Golden-trajectory equivalence: the batched mega-fleet engine must be
-BIT-IDENTICAL to the per-event ``AsyncOrchestrator`` on flat fleets.
+"""Golden-trajectory equivalence: the batched mega-fleet engine AND the
+vectorized event-window engine must be BIT-IDENTICAL to the per-event
+``AsyncOrchestrator`` on flat fleets.
 
-The batched engine changes only WHERE work happens (deferred vmap'd
-training, batched top-up dispatch) — every host-side RNG draw stays in the
-legacy per-dispatch order, so params, the processed-event trace, CommitLogs
-and the comm ledger must match exactly (``np.array_equal``, not allclose):
-any drift is an RNG-ordering or padding bug, not float noise.  Covered:
-plain, --secure-agg, --exec-backend scheduler, every fault-recovery policy,
-timeout commits, degenerate train chunks (padding), adaptive staleness, and
-kill/--resume ACROSS engines in both directions."""
+Both engines change only WHERE work happens (deferred vmap'd training,
+batched top-up dispatch; the window engine additionally serves every RNG/
+key draw from pre-drawn blocks, keeps arrivals in a structured-array store
+and defers all loss fetches to one bundled host sync per commit) — every
+host-side RNG draw stays in the legacy per-dispatch order, so params, the
+processed-event trace, CommitLogs and the comm ledger must match exactly
+(``np.array_equal``, not allclose): any drift is an RNG-ordering or
+padding bug, not float noise.  Covered: plain, --secure-agg,
+--exec-backend scheduler, every fault-recovery policy, timeout commits,
+degenerate train chunks (padding), adaptive staleness, and kill/--resume
+ACROSS engines in both directions."""
 import tempfile
 from dataclasses import asdict
 from pathlib import Path
@@ -23,8 +27,8 @@ from repro.data import FederatedDataset, medmnist_like, partition_dirichlet
 from repro.exec import make_backend
 from repro.models.cnn import CNN, CNNConfig
 from repro.orchestrator import (AsyncOrchestrator, BatchedAsyncOrchestrator,
-                                FaultConfig, StragglerPolicy,
-                                make_hybrid_fleet)
+                                EventWindowOrchestrator, FaultConfig,
+                                StragglerPolicy, make_hybrid_fleet)
 from repro.sched import K8sAdapter, SlurmAdapter
 
 CFG = CNNConfig("tiny-cnn", (28, 28, 1), 9, channels=(2, 4), dense=8)
@@ -52,13 +56,19 @@ def sched_backend():
 def make_orch(engine, secure=False, scheduler=False, buffer_size=4,
               commit_timeout=0.0, staleness_exponent=0.5, faults=None,
               train_chunk=3, checkpoint_mgr=None, checkpoint_every=0,
-              compression=None, commit_chunk=0):
+              compression=None, commit_chunk=0, window=7):
     fleet = make_hybrid_fleet(4, 4, seed=3,
                               data_sizes=[len(p) for p in PARTS])
     fed = FederatedDataset(DATA, PARTS, seed=0)
-    cls = (BatchedAsyncOrchestrator if engine == "batched"
-           else AsyncOrchestrator)
-    kw = {"train_chunk": train_chunk} if engine == "batched" else {}
+    cls = {"legacy": AsyncOrchestrator,
+           "batched": BatchedAsyncOrchestrator,
+           "window": EventWindowOrchestrator}[engine]
+    kw = {} if engine == "legacy" else {"train_chunk": train_chunk}
+    if engine == "window":
+        # a tiny window (default 7) forces frequent block refills and
+        # partial-block re-syncs — the hardest regime for the blocked-RNG
+        # bookkeeping
+        kw["window"] = window
     orch = cls(
         fleet=fleet, fed_data=fed, loss_fn=MODEL.loss_fn,
         fl=FLConfig(mode="async", num_clients=8, local_steps=2,
@@ -81,17 +91,19 @@ def make_orch(engine, secure=False, scheduler=False, buffer_size=4,
         orch._client_update, orch._commit_step = _STEP_CACHE[key]
     else:
         _STEP_CACHE[key] = (orch._client_update, orch._commit_step)
-    if engine == "batched":
+    if engine != "legacy":
         orch._vstep_cache = _VSTEP_CACHE
     return orch
 
 
 def _logs(orch):
     """CommitLogs as dicts with NaN (un-evaluated eval_metric) normalised —
-    NaN != NaN would fail an otherwise identical trajectory."""
+    NaN != NaN would fail an otherwise identical trajectory.  phase_wall is
+    host profiling (nondeterministic by nature) and is excluded."""
     out = []
     for l in orch.logs:
         d = asdict(l)
+        d.pop("phase_wall", None)
         out.append({k: (None if isinstance(v, float) and np.isnan(v) else v)
                     for k, v in d.items()})
     return out
@@ -111,49 +123,60 @@ def assert_same_trajectory(o1, p1, o2, p2):
             o2.recovered_updates, o2.lost_to_faults)
 
 
-def run_pair(n_commits=6, **kw):
+ENGINES = ["batched", "window"]
+
+
+def run_pair(n_commits=6, engine="batched", **kw):
     o1 = make_orch("legacy", **kw)
     p1, _ = o1.run(PARAMS, n_commits)
-    o2 = make_orch("batched", **kw)
+    o2 = make_orch(engine, **kw)
     p2, _ = o2.run(PARAMS, n_commits)
     assert_same_trajectory(o1, p1, o2, p2)
     return o1, o2
 
 
-def test_plain_run_bit_identical():
-    o1, _ = run_pair()
+@pytest.mark.parametrize("engine", ENGINES)
+def test_plain_run_bit_identical(engine):
+    o1, _ = run_pair(engine=engine)
     assert o1.version == 6 and o1.updates_applied > 0
 
 
-def test_secure_agg_bit_identical():
-    run_pair(secure=True)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_secure_agg_bit_identical(engine):
+    run_pair(secure=True, engine=engine)
 
 
-def test_scheduler_backend_bit_identical():
-    o1, _ = run_pair(scheduler=True,
+@pytest.mark.parametrize("engine", ENGINES)
+def test_scheduler_backend_bit_identical(engine):
+    o1, _ = run_pair(engine=engine, scheduler=True,
                      faults=FaultConfig(dropout_prob=0.1,
                                         recovery_policy="adaptive"))
     assert any(e[3] for e in o1.events_processed), \
         "fault path never exercised"
 
 
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("policy", ["restart", "resume", "adaptive",
                                     "discard"])
-def test_fault_recovery_bit_identical(policy):
-    o1, _ = run_pair(faults=FaultConfig(dropout_prob=0.15,
+def test_fault_recovery_bit_identical(policy, engine):
+    o1, _ = run_pair(engine=engine,
+                     faults=FaultConfig(dropout_prob=0.15,
                                         spot_preempt_prob=0.25,
                                         recovery_policy=policy))
     assert any(e[3] for e in o1.events_processed), \
         "fault path never exercised"
 
 
-def test_timeout_commits_bit_identical():
-    o1, _ = run_pair(buffer_size=16, commit_timeout=0.02, n_commits=4)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_timeout_commits_bit_identical(engine):
+    o1, _ = run_pair(buffer_size=16, commit_timeout=0.02, n_commits=4,
+                     engine=engine)
     assert any(l.timeout_commit for l in o1.logs)
 
 
-def test_adaptive_staleness_bit_identical():
-    run_pair(staleness_exponent="adaptive", n_commits=5)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_adaptive_staleness_bit_identical(engine):
+    run_pair(staleness_exponent="adaptive", n_commits=5, engine=engine)
 
 
 @pytest.mark.parametrize("chunk", [1, 2, 64])
@@ -161,6 +184,14 @@ def test_train_chunk_padding_bit_identical(chunk):
     # chunk=1: every job its own (padded-to-1) bucket; chunk=2: odd buckets
     # pad a lane; chunk=64 >> in-flight: one big padded bucket per snapshot
     run_pair(train_chunk=chunk, n_commits=4)
+
+
+@pytest.mark.parametrize("window", [1, 256])
+def test_window_size_extremes_bit_identical(window):
+    # window=1 degenerates every block to a single draw; window=256 means
+    # one refill serves the whole run (blocks die mostly un-consumed and
+    # every sync replays a partial prefix)
+    run_pair(n_commits=4, engine="window", window=window)
 
 
 # ----------------------------------------------------- fused commit axis
@@ -205,11 +236,14 @@ def test_kill_resume_fused_secure_chunked():
 
 
 @pytest.mark.parametrize("first,second", [("legacy", "batched"),
-                                          ("batched", "legacy")])
+                                          ("batched", "legacy"),
+                                          ("legacy", "window"),
+                                          ("window", "legacy"),
+                                          ("window", "batched")])
 def test_kill_resume_across_engines(first, second):
-    """A snapshot written by either engine restores into the other and
-    replays the uninterrupted trajectory bit-identically — batched
-    checkpoints materialize pending deltas, so the on-disk format is one."""
+    """A snapshot written by any engine restores into any other and
+    replays the uninterrupted trajectory bit-identically — deferred
+    deltas/losses are materialized at save, so the on-disk format is one."""
     o_full = make_orch(first)
     p_full, _ = o_full.run(PARAMS, 8)
 
@@ -223,3 +257,37 @@ def test_kill_resume_across_engines(first, second):
         assert o_rest.version == 4
         p2, _ = o_rest.run(p_r, 8, server_state=s_r)
     assert_same_trajectory(o_full, p_full, o_rest, p2)
+
+
+def test_cohort_window_matches_batched():
+    """Cohort mode is NOT legacy-identical (shared-draw approximation),
+    but the window engine must replay the batched engine's deterministic
+    cohort trajectory bit-for-bit — blocked draws == sequential draws."""
+    from repro.data import VirtualFederatedDataset
+    from repro.orchestrator import make_mega_fleet
+
+    def build(cls, **kw):
+        orch = cls(
+            fleet=make_mega_fleet(64, seed=3),
+            fed_data=VirtualFederatedDataset(DATA, PARTS, seed=0,
+                                             n_virtual=64),
+            loss_fn=MODEL.loss_fn,
+            fl=FLConfig(mode="async", num_clients=64, local_steps=2,
+                        client_lr=0.05),
+            async_cfg=AsyncConfig(buffer_size=4, max_concurrency=12,
+                                  max_staleness=50),
+            faults=FaultConfig(dropout_prob=0.1, recovery_policy="discard"),
+            straggler=StragglerPolicy(contention_sigma=0.5),
+            batch_size=4, flops_per_client_round=2e12, seed=7,
+            train_chunk=3, **kw)
+        orch._vstep_cache = _VSTEP_CACHE
+        return orch
+
+    o1 = build(BatchedAsyncOrchestrator)
+    p1, _ = o1.run(PARAMS, 5)
+    o2 = build(EventWindowOrchestrator, window=7)
+    # share o1's jitted steps: identical closures, avoids a recompile
+    o2._client_update, o2._commit_step = o1._client_update, o1._commit_step
+    o2._update_fn = o1._update_fn
+    p2, _ = o2.run(PARAMS, 5)
+    assert_same_trajectory(o1, p1, o2, p2)
