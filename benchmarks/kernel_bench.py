@@ -13,20 +13,34 @@ from repro.kernels import ops, ref
 from benchmarks.common import save
 
 
-def timeit(fn, *args, n=5):
-    # one warmup call (compile + first dispatch), then the timed loop.
-    # jax.block_until_ready handles tuples/pytrees, so no result probing.
+def timeit(fn, *args, n=7):
+    """(median us/call over n repeats, kernel launches per call).
+
+    One warmup call absorbs compile + first dispatch — and, being the
+    fresh trace of the (per-callsite) jit closure, is where kernels/ops'
+    call-time launch counter fires, so it doubles as the launch count per
+    logical call.  Each timed repeat is individually fenced with
+    ``jax.block_until_ready`` (it walks tuples/pytrees) and the MEDIAN is
+    reported: single-warmup means are easily skewed by one GC pause or
+    lazy-allocation hiccup on the shared CI boxes."""
+    ops.KERNEL_LAUNCHES = 0
     jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    launches = ops.KERNEL_LAUNCHES
+    reps = []
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / n * 1e6      # us
+        reps.append(time.perf_counter() - t0)
+    return float(np.median(reps)) * 1e6, launches      # us
 
 
-def _row(name, us, nbytes):
+def _row(name, timing, nbytes):
+    us, launches = timing
     row = {"name": name, "us_per_call": us, "bytes_touched": int(nbytes),
+           "launches_per_call": launches,
            "derived_GBps_touched": nbytes / us / 1e3}
-    print(f"kernel,{name},{us:.0f}us,{nbytes/us/1e3:.2f}GB/s-touched")
+    print(f"kernel,{name},{us:.0f}us,{launches}launch,"
+          f"{nbytes/us/1e3:.2f}GB/s-touched")
     return row
 
 
@@ -75,6 +89,25 @@ def main(rounds=None):
         timeit(jax.jit(lambda a: ops.fused_secure_commit(
             a, w, seeds, coef, 0, bits=8)), xs),
         fused_bytes))
+
+    # leaf bucketing: a many-leaf tree committed through the bucketed tree
+    # entry point (one launch) vs one kernel call per leaf — the dispatch
+    # collapse core/pipeline.py relies on.  Same total elements both ways.
+    n_leaves = 24
+    leaf_shapes = [(K, 1 << (10 + i % 5)) for i in range(n_leaves)]
+    leaves = [jnp.asarray(rng.normal(size=shp).astype(np.float32))
+              for shp in leaf_shapes]
+    tree_bytes = sum(4 * l.size + 4 * l.size // K for l in leaves)
+    rows.append(_row(
+        f"fused_plain_bucketed_{n_leaves}leaves",
+        timeit(jax.jit(lambda ls: ops.fused_plain_commit_tree(
+            ls, w, s, 0.5, bits=8, k=26)), leaves),
+        tree_bytes))
+    rows.append(_row(
+        f"fused_plain_per_leaf_{n_leaves}leaves",
+        timeit(jax.jit(lambda ls: [ops.fused_plain_commit(
+            l, w, s, 0.5, bits=8, k=26) for l in ls]), leaves),
+        tree_bytes))
 
     B, L, D, N = 4, 128, 1024, 16
     a = jnp.asarray(rng.uniform(0.5, 1, (B, L, D, N)).astype(np.float32))

@@ -36,8 +36,10 @@ class CompressionConfig:
     use_kernels: bool = False     # use Pallas kernels for the hot loops
     use_fused: bool = True        # fuse the commit path (compress + mask +
     #                               accumulate in one pass, kernels/fused_*);
-    #                               falls back to the unfused stages under an
-    #                               active GSPMD mesh or ineligible configs
+    #                               mesh-native (shard_mapped over an active
+    #                               GSPMD mesh); ineligible configs (e.g.
+    #                               stochastic rounding) still route those
+    #                               stages to the bit-identical jnp oracle
 
     @property
     def enabled(self) -> bool:

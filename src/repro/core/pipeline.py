@@ -86,10 +86,16 @@ Which boundaries fuse:
     per-slot work through the Pallas compress kernels
     (``use_kernels``) — there is no slot batch to fuse across.
 
-Pallas calls carry no GSPMD sharding rules, so fusion is gated off
-whenever a mesh is active at build time (models.sharding.get_mesh()) or
-the caller passes explicit param shardings — the unfused jnp stages
-lower under GSPMD as before.
+Fusion is mesh-native: under an active GSPMD mesh the kernels/ops entry
+points wrap every Pallas call in shard_map over the mesh's multi-device
+axes (row-sharding the blocked commit stack; see kernels/ops.py), so
+``UpdatePipeline.fused`` stays on when a mesh is active.  The fused
+combinators also BUCKET the tree: all leaves of the slot-stacked update
+tree are concatenated into one blocked [K, rows, block] bucket per
+commit, so a 100+-leaf model costs O(1) kernel launches instead of one
+per leaf shape (kops.fused_*_tree).  ``allow_fused=False`` remains the
+explicit caller escape hatch, and stochastic rounding still routes to
+the bit-identical jnp oracle.
 
 Why masking moves to the integer domain under quantization: float-domain
 pairwise masks are dense f32 noise, so a masked wire slot costs 4
@@ -123,14 +129,12 @@ from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import secure_agg as sec
 from repro.core.compression import compress_tree
 from repro.core.secure_agg import MASK_DOMAIN_TAG
 from repro.kernels import ops as kops
-from repro.models import sharding as sh
 
 if TYPE_CHECKING:                       # avoid circular import with round.py
     from repro.core.round import FLConfig
@@ -160,12 +164,12 @@ class UpdatePipeline:
                 "coordinate-wise trimming needs the individual updates that "
                 "pairwise masking hides; use fedavg/weighted")
         comp = cfg.compression
-        # Pallas fusion is an intra-device optimisation: pallas_call has no
-        # GSPMD sharding rules, so an active mesh at build time (or a caller
-        # that passed explicit param shardings -> allow_fused=False) keeps
-        # the unfused jnp stages, which lower under GSPMD as before.
+        # Fusion survives an active mesh: kernels/ops wraps each Pallas call
+        # in shard_map over the mesh (rows of the blocked commit stack are
+        # sharded, the slot sum is shard-local), so the only off-switches
+        # left are the config knob and the caller's explicit escape hatch.
         self.fused = (bool(getattr(comp, "use_fused", True))
-                      and allow_fused and sh.get_mesh() is None)
+                      and allow_fused)
         # fully-fusable compression: deterministic rounding, no per-slot
         # dropout randomness
         self._fusable_comp = (not comp.dropout_frac
@@ -290,19 +294,22 @@ class UpdatePipeline:
                  else jnp.zeros_like(w_raw))
             a = exponent if exponent is not None else 0.0
             if comp.enabled and self._fusable_comp:
-                # one-pass: top-k + quantize + discount + sum per leaf
-                summed = jax.tree.map(
-                    lambda d: kops.fused_plain_commit(
-                        d, w_raw, s, a, bits=comp.quantize_bits,
-                        k=comp.topk_k, block=comp.block), deltas)
+                # one-pass: top-k + quantize + discount + sum, all leaves
+                # bucketed into a single kernel launch
+                leaves, treedef = jax.tree.flatten(deltas)
+                summed = jax.tree.unflatten(
+                    treedef, kops.fused_plain_commit_tree(
+                        leaves, w_raw, s, a, bits=comp.quantize_bits,
+                        k=comp.topk_k, block=comp.block))
             else:
                 # per-slot stages that need slot randomness stay unfused;
-                # the accumulate still fuses
+                # the accumulate still fuses (one bucketed launch)
                 stacked = (self.compress_each(deltas, rng)
                            if comp.enabled else deltas)
-                summed = jax.tree.map(
-                    lambda d: kops.fused_accum(d, w_raw, s, a,
-                                               block=comp.block), stacked)
+                leaves, treedef = jax.tree.flatten(stacked)
+                summed = jax.tree.unflatten(
+                    treedef, kops.fused_accum_tree(leaves, w_raw, s, a,
+                                                   block=comp.block))
         else:
             stacked = self.compress_each(deltas, rng) \
                 if comp.enabled else deltas
@@ -332,18 +339,13 @@ class UpdatePipeline:
                 lambda t, r: compress_tree(t, pre, r))(stacked, rngs)
             k_in = 0
         leaves, treedef = jax.tree.flatten(stacked)
-        out, base = [], 0
-        for i, leaf in enumerate(leaves):
-            nr = (jax.random.fold_in(rng, i)
-                  if comp.stochastic_rounding else None)
-            out.append(kops.fused_secure_commit(
-                leaf, w_eff, seeds, coef, base, bits=comp.quantize_bits,
-                k=k_in, block=comp.block, use_pallas=self.fused,
-                noise_rng=nr))
-            # advance the mask stream by this leaf's padded blocked size
-            lead = leaf.shape[1:] or (1,)
-            nb = -(-lead[-1] // comp.block)
-            base += int(np.prod(lead[:-1], dtype=np.int64)) * nb * comp.block
+        # one bucketed launch for the whole tree; the bucket's row-major
+        # element index reproduces the old per-leaf base accumulation, so
+        # the mask stream is bitwise-unchanged
+        nr = rng if comp.stochastic_rounding else None
+        out = kops.fused_secure_commit_tree(
+            leaves, w_eff, seeds, coef, bits=comp.quantize_bits, k=k_in,
+            block=comp.block, use_pallas=self.fused, noise_rng=nr)
         return jax.tree.unflatten(treedef, out)
 
     def combine(self, deltas, weights, mask, losses, rng, ids=None,
@@ -413,10 +415,11 @@ class UpdatePipeline:
         elif self.fused:
             ones = jnp.ones((P,), jnp.float32)
             zeros = jnp.zeros((P,), jnp.float32)
-            summed = jax.tree.map(
-                lambda s: kops.fused_accum(s, ones, zeros, 0.0,
-                                           block=self.cfg.compression.block),
-                sums)
+            leaves, treedef = jax.tree.flatten(sums)
+            summed = jax.tree.unflatten(
+                treedef, kops.fused_accum_tree(
+                    leaves, ones, zeros, 0.0,
+                    block=self.cfg.compression.block))
         else:
             summed = jax.tree.map(lambda s: s.astype(jnp.float32).sum(0),
                                   sums)
@@ -427,7 +430,7 @@ def build_update_pipeline(cfg: "FLConfig", n_pods: int = 1,
                           allow_fused: bool = True) -> UpdatePipeline:
     """Build the stage stack once from FLConfig; all execution modes of
     round.py and async_round.py close over the returned pipeline.
-    ``allow_fused=False`` forces the unfused stages (used when the round
-    step is built with explicit param shardings — Pallas fusion has no
-    GSPMD story; an active mesh disables it automatically)."""
+    ``allow_fused=False`` forces the unfused stages — the explicit caller
+    escape hatch.  An active mesh no longer disables fusion: the kernel
+    entry points shard_map themselves over it (kernels/ops.py)."""
     return UpdatePipeline(cfg, n_pods=n_pods, allow_fused=allow_fused)

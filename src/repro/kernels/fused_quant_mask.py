@@ -29,6 +29,18 @@ implementation with identical bits.  Pair seeds arrive as a symmetric
 (secure_agg.pair_seeds); the signed coefficients sgn(id_j - id_i)*p_i*p_j
 arrive as int32 in {-1, 0, +1} and are applied as two's-complement
 multiplies, exact under wraparound.
+
+Shard invariance (what makes these kernels shard_map-safe): every
+per-block quantity — the plain kernel's per-slot per-block scale, the
+secure kernel's commit-common per-row scale, the top-k threshold — is a
+function of ONE row (one whole last-dim block), so sharding the row dim
+across devices changes nothing bitwise.  The only position-dependent
+quantity is the secure kernel's element index stream: ``base`` must be
+the GLOBAL element index of the shard's row 0 (callers under shard_map
+offset it by flat_shard_index * local_rows * block, kernels/ops.py), so
+PRF mask words are derived from global positions and cancel bitwise
+across any mesh shape.  ``base`` may be a traced uint32 — it is a kernel
+operand, not a compile-time constant.
 """
 from __future__ import annotations
 

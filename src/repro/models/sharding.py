@@ -21,6 +21,8 @@ import threading
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 BATCH = "__batch__"   # data-parallel batch axis (pod+data in multi-pod)
@@ -118,3 +120,36 @@ def axis_size(name: str) -> int:
     if mesh is None or name not in mesh.axis_names:
         return 1
     return mesh.shape[name]
+
+
+def fusion_axes() -> tuple:
+    """Mesh axes available to shard the fused-commit row (block) dim over
+    (kernels/ops shard_map wrappers).  All active mesh axes participate —
+    the blocked commit stack has no model-logical layout, so every device
+    should own a row slice — except axes excluded by ``exclude_axes``:
+    inside a ``vmap(..., spmd_axis_name=ax)`` body those axes belong to the
+    vmapped dim and may not be re-used by an inner shard_map.  Size-1 axes
+    are dropped (sharding over them is a no-op that still pays shard_map
+    overhead).  Empty tuple -> run the kernel unsharded."""
+    mesh = get_mesh()
+    if mesh is None:
+        return ()
+    excl = excluded_axes()
+    return tuple(a for a in mesh.axis_names
+                 if a not in excl and mesh.shape[a] > 1)
+
+
+def flat_shard_index(axes: Sequence[str], mesh: Optional[Mesh] = None):
+    """Row-major flat index of this device's shard along ``axes`` — valid
+    only inside a shard_map body mapped over those axes.  uint32 so the
+    fused secure-commit kernels can offset their global element index
+    stream position-independently (mask PRF words must be derived from
+    GLOBAL block indices, or masks would not cancel across shards).  Pass
+    ``mesh`` explicitly from closures that may be traced outside the
+    thread-local mesh context (kernels/ops' cached jits do)."""
+    mesh = mesh or get_mesh()
+    flat = jnp.uint32(0)
+    for a in axes:
+        flat = flat * np.uint32(mesh.shape[a]) \
+            + jax.lax.axis_index(a).astype(jnp.uint32)
+    return flat

@@ -13,6 +13,11 @@ Three layers of pinning:
     committed params — the acceptance criterion of the ISSUE.
 """
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -122,6 +127,135 @@ def test_integer_masks_cancel_exactly():
     unmasked = kops.fused_secure_commit(x, w, seeds,
                                         jnp.zeros_like(coef), 0, bits=8)
     np.testing.assert_array_equal(np.asarray(masked), np.asarray(unmasked))
+
+
+# ------------------------------------------------- leaf bucketing (PR 10)
+def test_bucketed_tree_matches_per_leaf_bitwise():
+    """The bucketed tree entry points (what core/pipeline dispatches) must
+    equal per-leaf kernel calls BITWISE: rows are whole blocks of one leaf
+    each, so block membership, per-block scales, top-k thresholds and the
+    secure mask stream (bucket row-major index == per-leaf ``base``
+    accumulation) are all unchanged — only the launch count collapses."""
+    rng = np.random.default_rng(11)
+    shapes = [(7,), (33, 9), (256,), (2, 5, 3), (515,)]
+    leaves = [jnp.asarray(rng.normal(size=(K,) + s).astype(np.float32) * 0.01)
+              for s in shapes]
+    w = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+    s = jnp.asarray(rng.integers(0, 5, K).astype(np.float32))
+
+    for got, want in zip(kops.fused_accum_tree(leaves, w, s, 0.5),
+                         [kops.fused_accum(l, w, s, 0.5) for l in leaves]):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    for got, want in zip(
+            kops.fused_plain_commit_tree(leaves, w, s, 0.5, bits=8, k=26),
+            [kops.fused_plain_commit(l, w, s, 0.5, bits=8, k=26)
+             for l in leaves]):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    ids = jnp.arange(1, K + 1, dtype=jnp.uint32)
+    seeds = sec.pair_seeds(jax.random.PRNGKey(3), ids)
+    coef = sec.pair_coef_int(ids, jnp.ones((K,), jnp.float32))
+    got_tree = kops.fused_secure_commit_tree(leaves, w, seeds, coef, bits=8)
+    base = 0
+    for got, leaf in zip(got_tree, leaves):
+        want = kops.fused_secure_commit(leaf, w, seeds, coef, base, bits=8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        base += _block(leaf)[0].shape[1] * 256   # padded elements of leaf
+
+
+def test_bucketed_tree_single_launch():
+    rng = np.random.default_rng(12)
+    leaves = [jnp.asarray(rng.normal(size=(K, 100 + 7 * i))
+                          .astype(np.float32)) for i in range(8)]
+    w = jnp.ones((K,), jnp.float32)
+    s = jnp.zeros((K,), jnp.float32)
+    kops.KERNEL_LAUNCHES = 0
+    kops.fused_plain_commit_tree(leaves, w, s, 0.5, bits=8, k=26)
+    assert kops.KERNEL_LAUNCHES == 1
+    kops.KERNEL_LAUNCHES = 0
+    [kops.fused_plain_commit(l, w, s, 0.5, bits=8, k=26) for l in leaves]
+    assert kops.KERNEL_LAUNCHES == len(leaves)
+
+
+# ------------------------------------- sharded == unsharded, bitwise (PR 10)
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FLConfig, build_update_pipeline
+from repro.core import secure_agg as sec
+from repro.kernels import ops as kops
+from repro.models import sharding as sh
+
+K = 4
+rng = np.random.default_rng(7)
+# 2049 elements -> 9 blocks of 256: odd row count forces the shard_map
+# wrappers through their pad-to-shard-multiple path
+x = jnp.asarray(rng.normal(size=(K, 2049)).astype(np.float32) * 0.01)
+w = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+s = jnp.asarray(rng.integers(0, 5, K).astype(np.float32))
+ids = jnp.arange(1, K + 1, dtype=jnp.uint32)
+part = jnp.asarray([1.0, 1.0, 0.0, 1.0], jnp.float32)
+seeds = sec.pair_seeds(jax.random.PRNGKey(3), ids)
+coef = sec.pair_coef_int(ids, part)
+leaves = [x, jnp.asarray(rng.normal(size=(K, 3, 130)).astype(np.float32))]
+
+ref = {
+    "quant": kops.quantize_dequant(x[0], bits=8),
+    "topk": kops.topk_sparsify(x[0], k=26),
+    "accum": kops.fused_accum(x, w, s, 0.5),
+    "plain": kops.fused_plain_commit(x, w, s, 0.5, bits=8, k=26),
+    "secure": kops.fused_secure_commit(x, w, seeds, coef, 7, bits=8),
+    "tree": kops.fused_secure_commit_tree(leaves, w, seeds, coef, bits=8),
+}
+
+mesh = jax.make_mesh((2,), ("data",))
+out = {}
+with sh.use_mesh(mesh):
+    assert build_update_pipeline(FLConfig()).fused, "gate-lift regression"
+    got = {
+        "quant": kops.quantize_dequant(x[0], bits=8),
+        "topk": kops.topk_sparsify(x[0], k=26),
+        "accum": kops.fused_accum(x, w, s, 0.5),
+        "plain": kops.fused_plain_commit(x, w, s, 0.5, bits=8, k=26),
+        "secure": kops.fused_secure_commit(x, w, seeds, coef, 7, bits=8),
+        "tree": kops.fused_secure_commit_tree(leaves, w, seeds, coef,
+                                              bits=8),
+    }
+    for name in ref:
+        out[name] = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree.leaves(ref[name]), jax.tree.leaves(got[name])))
+    # mask cancellation stays BITWISE with sharded PRF seeds: each shard
+    # derives the mask stream from the GLOBAL element index (base + flat
+    # shard offset), so masked == coef-zeroed exactly under the mesh
+    masked = kops.fused_secure_commit(x, w * part, seeds, coef, 0, bits=8)
+    unmasked = kops.fused_secure_commit(x, w * part, seeds,
+                                        jnp.zeros_like(coef), 0, bits=8)
+    out["mask_cancel"] = float(jnp.abs(masked - unmasked).max())
+print(json.dumps(out))
+"""
+
+
+def test_sharded_matches_unsharded_bitwise():
+    """Every fused entry point under an ACTIVE 2-device mesh must equal its
+    no-mesh result BITWISE (row-sharding preserves block membership and all
+    per-block quantities), and the integer mask stream must still cancel
+    exactly with position-independent per-shard PRF bases."""
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(root / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                         capture_output=True, text=True, env=env, cwd=root,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res == {name: 0.0 for name in res}, res
 
 
 # --------------------------------------- fused vs unfused, all four regimes
